@@ -1,0 +1,434 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of one
+jitted training/eval step on this host; derived = the figure's headline
+quantity).  Detailed curves are written to results/benchmarks/*.json.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (MetaConfig, init_state, make_eval_fn, make_meta_step,
+                        diffusion, topology)
+from repro.data.fewshot import FewShotSampler
+from repro.data.sine import (SineTaskDistribution, agent_sine_distributions,
+                             stacked_agent_batch)
+from repro.models.simple import FewShotCNN, SineMLP
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "benchmarks")
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us: float, derived: str, detail: dict | None = None):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+    if detail is not None:
+        os.makedirs(RESULTS, exist_ok=True)
+        with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
+            json.dump(detail, f, indent=1)
+
+
+def _timed(fn, *args, reps=3):
+    fn(*args)                                   # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Shared sine harness (paper §4.1 setup: K=6, Fig 2a graph, Adam mu=1e-3)
+# ---------------------------------------------------------------------------
+
+def _sine_train(strategy: str, steps: int, seed: int = 0, mode: str = "maml",
+                outer: str = "adam", lr: float = 1e-3, eval_every: int = 50):
+    cfg = get_config("sine_mlp")
+    model = SineMLP(cfg)
+    K = 6
+    combine = {"dif": "dense", "centralized": "centralized",
+               "noncoop": "none"}[strategy]
+    mcfg = MetaConfig(num_agents=K, tasks_per_agent=5, inner_lr=cfg.inner_lr,
+                      mode=mode, combine=combine, topology="paper",
+                      outer_optimizer=outer, outer_lr=lr)
+    state = init_state(jax.random.key(seed), model.init, mcfg,
+                       identical_init=True)
+    step = jax.jit(make_meta_step(model.loss_fn, mcfg))
+    dists = agent_sine_distributions(K, seed=seed)
+    evald = SineTaskDistribution(seed=999)      # full-range eval (paper)
+    evaln = make_eval_fn(model.loss_fn, inner_lr=cfg.inner_lr, inner_steps=1)
+    (esx, esy), (eqx, eqy) = evald.sample_batch(200, 10)
+    esx, esy, eqx, eqy = map(jnp.asarray, (esx, esy, eqx, eqy))
+    curve, step_us = [], None
+    for i in range(steps):
+        support, query = stacked_agent_batch(dists, 5, 10)
+        t0 = time.perf_counter()
+        state, metrics = step(state, jax.tree.map(jnp.asarray, support),
+                              jax.tree.map(jnp.asarray, query))
+        if i == steps - 1:
+            jax.block_until_ready(metrics["loss"])
+            step_us = (time.perf_counter() - t0) * 1e6
+        if i % eval_every == 0 or i == steps - 1:
+            if strategy == "noncoop":
+                # paper protocol: average of per-agent test losses
+                losses = []
+                for k in range(K):
+                    pk = jax.tree.map(lambda x: x[k], state.params)
+                    losses.append(float(np.mean(np.asarray(
+                        evaln(pk, (esx, esy), (eqx, eqy)))[:, 1])))
+                curve.append((i, float(np.mean(losses))))
+            else:
+                c = diffusion.centroid(state.params)
+                l = float(np.mean(np.asarray(evaln(c, (esx, esy), (eqx, eqy)))[:, 1]))
+                curve.append((i, l))
+    return state, model, curve, step_us
+
+
+def bench_fig2b_sine_regression(quick: bool):
+    """Fig 2b: test loss during training — centralized vs Dif vs non-coop."""
+    steps = 200 if quick else 1000
+    out = {}
+    for strat in ["centralized", "dif", "noncoop"]:
+        _, _, curve, us = _sine_train(strat, steps)
+        out[strat] = curve
+        emit(f"fig2b_sine_{strat}", us,
+             f"final_test_loss={curve[-1][1]:.4f}")
+    gap_cd = out["dif"][-1][1] - out["centralized"][-1][1]
+    gap_nd = out["noncoop"][-1][1] - out["dif"][-1][1]
+    emit("fig2b_summary", 0.0,
+         f"dif_minus_centralized={gap_cd:.4f};noncoop_minus_dif={gap_nd:.4f}",
+         detail=out)
+
+
+def bench_fig2c_adaptation_steps(quick: bool):
+    """Fig 2c: post-training test loss vs number of adaptation steps."""
+    steps = 200 if quick else 1000
+    n_adapt = 10
+    evald = SineTaskDistribution(seed=777)
+    (sx, sy), (qx, qy) = evald.sample_batch(200, 10)
+    sx, sy, qx, qy = map(jnp.asarray, (sx, sy, qx, qy))
+    out = {}
+    for strat in ["centralized", "dif", "noncoop"]:
+        state, model, _, us = _sine_train(strat, steps)
+        ev = make_eval_fn(model.loss_fn, inner_lr=0.01, inner_steps=n_adapt)
+        if strat == "noncoop":
+            curves = []
+            for k in range(6):
+                pk = jax.tree.map(lambda x: x[k], state.params)
+                curves.append(np.asarray(ev(pk, (sx, sy), (qx, qy))).mean(0))
+            curve = np.mean(curves, axis=0)
+        else:
+            c = diffusion.centroid(state.params)
+            curve = np.asarray(ev(c, (sx, sy), (qx, qy))).mean(0)
+        out[strat] = curve.tolist()
+        emit(f"fig2c_adapt_{strat}", us,
+             f"loss_step1={curve[1]:.4f};loss_step10={curve[10]:.4f}")
+    emit("fig2c_summary", 0.0,
+         "ordering_preserved=%s" % (out["dif"][10] < out["noncoop"][10]),
+         detail=out)
+
+
+def bench_fig3_fewshot_classification(quick: bool):
+    """Fig 3 analogue: few-shot classification (synthetic Omniglot
+    surrogate), centralized vs Dif vs non-coop, 5-way 1-shot."""
+    steps = 60 if quick else 300
+    cfg = get_config("omniglot_cnn")
+    sampler = FewShotSampler(n_classes=80, n_way=cfg.vocab_size, k_shot=1,
+                             n_query=5, seed=0)
+    model = FewShotCNN(cfg, image_hw=sampler.image_hw)
+    out = {}
+    for strat in ["centralized", "dif", "noncoop"]:
+        combine = {"dif": "dense", "centralized": "centralized",
+                   "noncoop": "none"}[strat]
+        mcfg = MetaConfig(num_agents=6, tasks_per_agent=2, inner_lr=cfg.inner_lr,
+                          mode="maml", combine=combine, topology="paper",
+                          outer_optimizer="adam", outer_lr=1e-3)
+        state = init_state(jax.random.key(0), model.init, mcfg,
+                           identical_init=True)
+        step = jax.jit(make_meta_step(model.loss_fn, mcfg))
+        us = None
+        accs = []
+        for i in range(steps):
+            sup, qry = sampler.sample_agents(6, 2)
+            t0 = time.perf_counter()
+            state, m = step(state, jax.tree.map(jnp.asarray, sup),
+                            jax.tree.map(jnp.asarray, qry))
+            if i == steps - 1:
+                jax.block_until_ready(m["loss"])
+                us = (time.perf_counter() - t0) * 1e6
+            if i % max(1, steps // 5) == 0 or i == steps - 1:
+                (tsx, tsy), (tqx, tqy) = sampler.sample(50, split="test",
+                                                        seed=4242)
+                c = diffusion.centroid(state.params)
+                accs_k = []
+                agents = range(6) if strat == "noncoop" else [None]
+                for k in agents:
+                    p = c if k is None else jax.tree.map(lambda x: x[k],
+                                                         state.params)
+                    def adapted_acc(sx_, sy_, qx_, qy_):
+                        g = jax.grad(model.loss_fn)(p, (sx_, sy_))
+                        pa = jax.tree.map(lambda a, b: a - cfg.inner_lr * b,
+                                          p, g)
+                        return model.accuracy(pa, (qx_, qy_))
+                    acc = jnp.mean(jax.vmap(adapted_acc)(
+                        jnp.asarray(tsx), jnp.asarray(tsy),
+                        jnp.asarray(tqx), jnp.asarray(tqy)))
+                    accs_k.append(float(acc))
+                accs.append((i, float(np.mean(accs_k))))
+        out[strat] = accs
+        emit(f"fig3_fewshot_{strat}", us, f"final_test_acc={accs[-1][1]:.4f}")
+    emit("fig3_summary", 0.0,
+         "dif_ge_noncoop=%s" % (out["dif"][-1][1] >= out["noncoop"][-1][1] - 0.02),
+         detail=out)
+
+
+def bench_thm1_agreement(quick: bool):
+    """Thm 1: network disagreement decays linearly at rate lambda_2, then
+    plateaus at O(mu^2)."""
+    cfg = get_config("sine_mlp")
+    model = SineMLP(cfg)
+    rows = {}
+    for mu in [5e-3, 1e-3]:
+        mcfg = MetaConfig(num_agents=6, tasks_per_agent=3, inner_lr=0.01,
+                          mode="maml", combine="dense", topology="ring",
+                          outer_optimizer="sgd", outer_lr=mu)
+        state = init_state(jax.random.key(1), model.init, mcfg,
+                           identical_init=False)
+        step = jax.jit(make_meta_step(model.loss_fn, mcfg))
+        dists = agent_sine_distributions(6)
+        ds = [float(diffusion.disagreement(state.params))]
+        for i in range(80 if quick else 300):
+            sup, qry = stacked_agent_batch(dists, 3, 10)
+            state, m = step(state, jax.tree.map(jnp.asarray, sup),
+                            jax.tree.map(jnp.asarray, qry))
+            ds.append(float(m["disagreement"]))
+        rows[f"mu={mu}"] = ds
+        plateau = float(np.mean(ds[-20:]))
+        emit(f"thm1_agreement_mu{mu}", 0.0,
+             f"plateau={plateau:.3e};decay10={ds[10]/ds[0]:.3e}")
+    lam2 = topology.mixing_rate(topology.combination_matrix(6, "ring"))
+    p1 = np.mean(rows["mu=0.005"][-20:])
+    p2 = np.mean(rows["mu=0.001"][-20:])
+    emit("thm1_summary", 0.0,
+         f"lambda2={lam2:.3f};plateau_ratio={(p1 / p2):.1f};mu_ratio_sq=25.0",
+         detail=rows)
+
+
+def bench_thm2_stationarity(quick: bool):
+    """Thm 2/Cor 1: ||grad J(centroid)||^2 reaches an O(mu) ball."""
+    from repro.core import maml
+    cfg = get_config("sine_mlp")
+    model = SineMLP(cfg)
+    dists = agent_sine_distributions(6)
+    out = {}
+    for mu in [2e-3, 5e-4]:
+        mcfg = MetaConfig(num_agents=6, tasks_per_agent=5, inner_lr=0.01,
+                          mode="maml", combine="dense", topology="paper",
+                          outer_optimizer="sgd", outer_lr=mu)
+        state = init_state(jax.random.key(0), model.init, mcfg,
+                           identical_init=True)
+        step = jax.jit(make_meta_step(model.loss_fn, mcfg))
+
+        @jax.jit
+        def grad_norm_sq(params_c, sup, qry):
+            def one_agent(s, q):
+                _, g = maml.multi_task_meta_grad(model.loss_fn, params_c,
+                                                 s, q, alpha=0.01)
+                return g
+            gs = jax.vmap(one_agent)(sup, qry)
+            g_mean = jax.tree.map(lambda x: jnp.mean(x, 0), gs)
+            return sum(jnp.sum(x ** 2) for x in jax.tree.leaves(g_mean))
+
+        norms = []
+        for i in range(100 if quick else 400):
+            sup, qry = stacked_agent_batch(dists, 5, 10)
+            sup = jax.tree.map(jnp.asarray, sup)
+            qry = jax.tree.map(jnp.asarray, qry)
+            state, _ = step(state, sup, qry)
+            if i % 20 == 0:
+                c = diffusion.centroid(state.params)
+                norms.append(float(grad_norm_sq(c, sup, qry)))
+        out[f"mu={mu}"] = norms
+        emit(f"thm2_stationarity_mu{mu}", 0.0,
+             f"grad_norm_sq_final={norms[-1]:.3e};initial={norms[0]:.3e}")
+    emit("thm2_summary", 0.0, "smaller_mu_smaller_ball=%s"
+         % (np.min(out["mu=0.0005"]) <= np.min(out["mu=0.002"]) * 2),
+         detail=out)
+
+
+def bench_combine_strategies(quick: bool):
+    """Collective cost of the combine step: dense einsum vs sparse
+    (ppermute-schedule, host-emulated) vs centralized, on a 1M-param
+    launch model, K=16 ring."""
+    K = 16
+    A = topology.combination_matrix(K, "ring")
+    lam2 = topology.mixing_rate(A)
+    phi = {"w": jax.random.normal(jax.random.key(0), (K, 1024, 1024)),
+           "b": jax.random.normal(jax.random.key(1), (K, 4096))}
+    nbytes = sum(x.nbytes // K for x in jax.tree.leaves(phi))
+    dense = jax.jit(lambda p: diffusion.dense_combine(jnp.asarray(A), p))
+    sparse = jax.jit(lambda p: diffusion.sparse_combine_host(A, p))
+    cent = jax.jit(diffusion.centralized_combine)
+    us_d = _timed(dense, phi)
+    us_s = _timed(sparse, phi)
+    us_c = _timed(cent, phi)
+    deg = int((A[:, 0] > 0).sum() - 1)
+    emit("combine_dense", us_d,
+         f"wire_bytes_model={(K - 1) * nbytes};lambda2={lam2:.3f}")
+    emit("combine_sparse_ring", us_s,
+         f"wire_bytes_model={deg * nbytes};lambda2={lam2:.3f}")
+    emit("combine_centralized", us_c,
+         f"wire_bytes_model={2 * (K - 1) * nbytes // K};lambda2=0.0")
+    d = dense(phi)
+    s = sparse(phi)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(d), jax.tree.leaves(s)))
+    emit("combine_sparse_equals_dense", 0.0, f"max_err={err:.2e}")
+
+
+def bench_kernels(quick: bool):
+    """Pallas kernels (interpret mode) vs jnp oracles: correctness +
+    oracle wall time (kernels target TPU; interpret timing is not a perf
+    number, the oracle timing is the CPU reference)."""
+    from repro.kernels.dif_combine.dif_combine import dif_combine
+    from repro.kernels.dif_combine.ref import dif_combine_ref
+    from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+    K, M = 16, 1 << 16
+    A = jnp.asarray(topology.combination_matrix(K, "ring"), jnp.float32)
+    phi = jax.random.normal(jax.random.key(0), (K, M))
+    out = dif_combine(A, phi, block_m=512, interpret=True)
+    err = float(jnp.max(jnp.abs(out - dif_combine_ref(A, phi))))
+    us = _timed(jax.jit(lambda a, p: dif_combine_ref(a, p)), A, phi)
+    emit("kernel_dif_combine", us, f"allclose_err={err:.2e};shape={K}x{M}")
+
+    B, H, S, d = 1, 2, 256, 64
+    q, k, v = [jax.random.normal(jax.random.key(i), (B, H, S, d))
+               for i in range(3)]
+    o = flash_attention_fwd(q, k, v, causal=True, block_q=128, block_k=128,
+                            interpret=True)
+    err = float(jnp.max(jnp.abs(o - attention_ref(q, k, v, causal=True))))
+    us = _timed(jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True)),
+                q, k, v)
+    emit("kernel_flash_attention", us, f"allclose_err={err:.2e};S={S}")
+
+    Bb, L, Hh, P, N = 1, 256, 2, 32, 64
+    ks = jax.random.split(jax.random.key(7), 5)
+    x = jax.random.normal(ks[0], (Bb, L, Hh, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, L, Hh))) * 0.5
+    Aa = -jnp.exp(jax.random.normal(ks[2], (Hh,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (Bb, L, Hh, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (Bb, L, Hh, N)) * 0.3
+    y, _ = ssd_scan_pallas(x, dt, Aa, Bm, Cm, chunk=64, interpret=True)
+    yr, _ = ssd_scan_ref(x, dt, Aa, Bm, Cm)
+    err = float(jnp.max(jnp.abs(y - yr)))
+    us = _timed(jax.jit(lambda *a: ssd_scan_ref(*a)[0]), x, dt, Aa, Bm, Cm)
+    emit("kernel_ssd_scan", us, f"allclose_err={err:.2e};L={L}")
+
+
+def bench_meta_modes(quick: bool):
+    """Exact MAML vs FOMAML vs Reptile on the sine benchmark (paper uses
+    exact; the frontier configs use FOMAML — quantify the gap)."""
+    steps = 150 if quick else 600
+    for mode in ["maml", "fomaml", "reptile"]:
+        _, model, curve, us = _sine_train("dif", steps, mode=mode,
+                                          lr=1e-3 if mode != "reptile" else 2e-2)
+        emit(f"meta_mode_{mode}", us, f"final_test_loss={curve[-1][1]:.4f}")
+
+
+
+
+def bench_topology_ablation(quick: bool):
+    """Beyond-paper: Thm 1 makes λ₂ (the mixing rate) the contraction
+    constant of the network — sweep topologies at K=16 and relate λ₂ to
+    post-training performance and disagreement."""
+    from repro.core import init_state, make_meta_step
+    steps = 120 if quick else 500
+    cfg = get_config("sine_mlp")
+    model = SineMLP(cfg)
+    evald = SineTaskDistribution(seed=999)
+    evaln = make_eval_fn(model.loss_fn, inner_lr=0.01, inner_steps=1)
+    (sx, sy), (qx, qy) = evald.sample_batch(200, 10)
+    sx, sy, qx, qy = map(jnp.asarray, (sx, sy, qx, qy))
+    out = {}
+    K = 16
+    for topo in ["full", "torus", "erdos", "ring", "star"]:
+        A = topology.combination_matrix(K, topo)
+        lam2 = topology.mixing_rate(A)
+        mcfg = MetaConfig(num_agents=K, tasks_per_agent=3, inner_lr=0.01,
+                          mode="maml", combine="dense", topology=topo,
+                          outer_optimizer="adam", outer_lr=1e-3)
+        state = init_state(jax.random.key(0), model.init, mcfg,
+                           identical_init=False)
+        step = jax.jit(make_meta_step(model.loss_fn, mcfg))
+        dists = agent_sine_distributions(K)
+        for i in range(steps):
+            sup, qry = stacked_agent_batch(dists, 3, 10)
+            state, m = step(state, jax.tree.map(jnp.asarray, sup),
+                            jax.tree.map(jnp.asarray, qry))
+        c = diffusion.centroid(state.params)
+        loss = float(np.mean(np.asarray(evaln(c, (sx, sy), (qx, qy)))[:, 1]))
+        dis = float(m["disagreement"])
+        deg = int((A[:, 0] > 0).sum() - 1) if topo != "erdos" else             int(np.mean((A > 0).sum(0) - 1))
+        out[topo] = {"lambda2": lam2, "loss": loss, "disagreement": dis,
+                     "avg_degree": deg}
+        emit(f"topology_{topo}", 0.0,
+             f"lambda2={lam2:.3f};final_loss={loss:.4f};"
+             f"disagreement={dis:.2e};avg_degree={deg}")
+    # Thm 1 prediction: plateau disagreement grows with λ₂²/(1−λ₂)²
+    ordered = sorted(out, key=lambda t: out[t]["lambda2"])
+    mono = all(out[a]["disagreement"] <= out[b]["disagreement"] * 50
+               for a, b in zip(ordered, ordered[1:]))
+    emit("topology_summary", 0.0,
+         f"lambda2_order={'<'.join(ordered)};disagreement_tracks_lambda2={mono}",
+         detail=out)
+
+
+BENCHES = {
+    "fig2b": bench_fig2b_sine_regression,
+    "fig2c": bench_fig2c_adaptation_steps,
+    "fig3": bench_fig3_fewshot_classification,
+    "thm1": bench_thm1_agreement,
+    "thm2": bench_thm2_stationarity,
+    "combine": bench_combine_strategies,
+    "kernels": bench_kernels,
+    "modes": bench_meta_modes,
+    "topology": bench_topology_ablation,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        fn(args.quick)
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "summary.csv"), "w") as f:
+        f.write("name,us_per_call,derived\n")
+        for n, u, d in ROWS:
+            f.write(f"{n},{u:.1f},{d}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""End-to-end driver: decentralized meta-training of a ~100M-parameter LM.
+
+Each agent holds a shard of synthetic text *domains* (data/lm_tasks.py);
+one Dif-MAML iteration adapts to sampled domains (inner step), takes the
+meta-gradient on held-out batches (outer), and diffuses launch models over
+a ring.  This is the production analogue of the paper's heterogeneous-task
+experiment, built on the same launch/steps.py bundles the dry-run lowers
+for the 256-chip mesh.
+
+Default geometry (~100M params: 12L × d512 × ffn2048 × 32k vocab):
+  PYTHONPATH=src python examples/decentralized_lm.py --steps 300
+CPU smoke (seconds):
+  PYTHONPATH=src python examples/decentralized_lm.py --tiny --steps 4
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs.base import ArchConfig, INPUT_SHAPES, InputShape
+from repro.core import diffusion
+from repro.data.lm_tasks import LMTaskSampler
+from repro.launch.mesh import make_host_mesh
+from repro.launch import steps as S
+from repro.models.init import count_params
+from repro.models.transformer import build_model
+
+
+def lm_100m(tiny: bool) -> ArchConfig:
+    if tiny:
+        return ArchConfig(
+            name="lm-tiny", arch_type="dense", num_layers=2, d_model=64,
+            num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+            vocab_size=512, meta_mode="maml", topology="ring",
+            outer_optimizer="adam", dtype="float32", remat=False,
+            attn_q_chunk=None)
+    return ArchConfig(
+        name="lm-100m", arch_type="dense", num_layers=12, d_model=512,
+        num_heads=8, num_kv_heads=4, head_dim=64, d_ff=2048,
+        vocab_size=32768, meta_mode="maml", topology="ring",
+        outer_optimizer="adam", dtype="float32", remat=False,
+        attn_q_chunk=256)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = lm_100m(args.tiny)
+    seq = args.seq or (32 if args.tiny else 256)
+    gb = args.global_batch or (8 if args.tiny else 32)
+    shape = InputShape("lm_example", seq, gb, "train")
+    INPUT_SHAPES[shape.name] = shape
+
+    mesh = make_host_mesh(data=min(4, len(jax.devices())))
+    with mesh:
+        bundle = S.build_train(cfg, mesh, shape.name)
+        model = build_model(cfg)
+        n = count_params(model.specs())
+        print(f"[lm] {cfg.name}: {n/1e6:.1f}M params, K={bundle.K} agents, "
+              f"T={bundle.T}×{bundle.tb} tasks, seq={seq}, batch={gb}")
+        state = bundle.init_state(seed=0)
+        step = jax.jit(bundle.step_fn, donate_argnums=(0,))
+        sampler = LMTaskSampler(cfg.padded_vocab, seq,
+                                n_domains=8 * max(1, bundle.K))
+        t0 = time.time()
+        for i in range(args.steps):
+            d = sampler.sample_task(i % sampler.n_domains, gb, seed=i)
+            batch = {k: jnp.asarray(v) for k, v in d.items()}
+            state, m = step(state, batch)
+            if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+                print(f"step {int(state.step):4d} meta-loss "
+                      f"{float(m['loss']):.4f} disagreement "
+                      f"{float(m['disagreement']):.2e} "
+                      f"({time.time()-t0:.1f}s)")
+        if args.ckpt_dir:
+            save_checkpoint(args.ckpt_dir, int(state.step), state)
+            print(f"[lm] checkpoint saved to {args.ckpt_dir}")
+
+        # post-training: adapt the centroid launch model to an UNSEEN domain
+        centroid = diffusion.centroid(state.params)
+        unseen = sampler.n_domains - 1
+        d = sampler.sample_task(unseen, gb, seed=10_001)
+        batch = {k: jnp.asarray(v) for k, v in d.items()}
+        before = float(model.loss_fn(centroid, batch))
+        g = jax.grad(model.loss_fn)(centroid, batch)
+        adapted = jax.tree.map(lambda p, gg: p - cfg.inner_lr * gg,
+                               centroid, g)
+        d2 = sampler.sample_task(unseen, gb, seed=10_002)
+        batch2 = {k: jnp.asarray(v) for k, v in d2.items()}
+        after = float(model.loss_fn(adapted, batch2))
+        print(f"[lm] unseen-domain loss: zero-shot {before:.4f} → "
+              f"one adaptation step {after:.4f}")
+
+
+if __name__ == "__main__":
+    main()

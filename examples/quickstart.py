@@ -1,0 +1,69 @@
+"""Quickstart: Dif-MAML on the paper's sine-regression benchmark (§4.1).
+
+Six agents, each seeing a different amplitude band of the task universe,
+cooperate over the paper's Fig. 2a graph and jointly meta-learn a launch
+model that adapts to *any* sinusoid in one gradient step.
+
+  PYTHONPATH=src python examples/quickstart.py [--steps 400]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (MetaConfig, diffusion, init_state, make_eval_fn,
+                        make_meta_step, topology)
+from repro.data.sine import (SineTaskDistribution, agent_sine_distributions,
+                             stacked_agent_batch)
+from repro.models.simple import SineMLP
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--agents", type=int, default=6)
+    ap.add_argument("--topology", default="paper")
+    args = ap.parse_args()
+
+    cfg = get_config("sine_mlp")
+    model = SineMLP(cfg)
+    K = args.agents
+    mcfg = MetaConfig(num_agents=K, tasks_per_agent=5, inner_lr=cfg.inner_lr,
+                      mode="maml", combine="dense",
+                      topology=args.topology if K == 6 else "ring",
+                      outer_optimizer="adam", outer_lr=1e-3)
+    A = topology.combination_matrix(mcfg.num_agents, mcfg.topology)
+    print(f"K={K} agents on '{mcfg.topology}' graph, "
+          f"λ₂={topology.mixing_rate(A):.3f} (mixing rate, Thm 1)")
+
+    state = init_state(jax.random.key(0), model.init, mcfg,
+                       identical_init=True)
+    step = jax.jit(make_meta_step(model.loss_fn, mcfg))
+    dists = agent_sine_distributions(K)
+    evald = SineTaskDistribution(seed=999)
+    evaln = make_eval_fn(model.loss_fn, inner_lr=cfg.inner_lr, inner_steps=5)
+    (sx, sy), (qx, qy) = evald.sample_batch(200, 10)
+    sx, sy, qx, qy = map(jnp.asarray, (sx, sy, qx, qy))
+
+    for i in range(args.steps):
+        support, query = stacked_agent_batch(dists, 5, 10)
+        state, metrics = step(state, jax.tree.map(jnp.asarray, support),
+                              jax.tree.map(jnp.asarray, query))
+        if i % 50 == 0 or i == args.steps - 1:
+            c = diffusion.centroid(state.params)
+            curve = np.asarray(evaln(c, (sx, sy), (qx, qy))).mean(0)
+            print(f"step {i:4d}  train-loss {float(metrics['loss']):.4f}  "
+                  f"disagreement {float(metrics['disagreement']):.2e}  "
+                  f"eval 0-shot {curve[0]:.3f} → 1-step {curve[1]:.3f} "
+                  f"→ 5-step {curve[5]:.3f}")
+    print("done: the launch model adapts to unseen amplitudes in one step.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Adapt-then-serve example (thin wrapper over launch/serve.py).
+
+The product of Dif-MAML is a launch model that specializes fast: this
+example adapts it to a synthetic domain with 2 gradient steps, then serves
+a batch of decode requests from the adapted weights.
+
+  PYTHONPATH=src python examples/serve_adapted.py [--arch qwen2-1.5b]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    args, rest = ap.parse_known_args()
+    sys.argv = ["serve", "--arch", args.arch, "--reduced",
+                "--batch", "4", "--prompt-len", "8", "--gen", "16",
+                "--adapt-steps", "2"] + rest
+    serve_main()

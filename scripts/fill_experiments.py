@@ -1,0 +1,96 @@
+"""Regenerate the data tables inside EXPERIMENTS.md from results/.
+
+  PYTHONPATH=src python scripts/fill_experiments.py
+"""
+import glob
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def dryrun_table() -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ROOT, "results/dryrun/*.json"))):
+        # baselines only: <arch>__<shape>__single.json (HC-tagged variants
+        # carry extra __ suffixes and live in §Perf)
+        if not re.match(r"^[a-z0-9_]+__[a-z0-9_]+__single\.json$",
+                        os.path.basename(path)):
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        rows.append(r)
+    out = ["| arch | shape | K | FLOPs/dev | HBM B/dev | wire B/dev (ops) "
+           "| temp GiB/dev | args GiB/dev | compile s |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        r["arch"] = r["arch"].replace("-", "_").replace(".", "_")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        k = r.get("num_agents", "—")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {k} "
+            f"| {r['flops_per_device']:.2e} | {r['bytes_per_device']:.2e} "
+            f"| {r['collectives']['total_bytes']:.2e} ({r['collectives']['total_count']}) "
+            f"| {r['memory']['temp_size_in_bytes']/2**30:.1f} "
+            f"| {r['memory']['argument_size_in_bytes']/2**30:.2f} "
+            f"| {r['compile_s']:.0f} |")
+    return "\n".join(out)
+
+
+def roofline_table(top_n: int = 12) -> str:
+    path = os.path.join(ROOT, "results/roofline.csv")
+    if not os.path.exists(path):
+        return "(run benchmarks.roofline first)"
+    lines = open(path).read().strip().splitlines()
+    hdr = lines[0].split(",")
+    recs = [dict(zip(hdr, l.split(","))) for l in lines[1:]]
+    recs.sort(key=lambda r: -max(float(r["compute_s"]), float(r["memory_s"]),
+                                 float(r["collective_s"])))
+    out = ["| arch | shape | mesh | compute s | memory s | collective s "
+           "| dominant | MODEL/HLO |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in recs[:top_n]:
+        out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                   f"| {float(r['compute_s']):.2e} | {float(r['memory_s']):.2e} "
+                   f"| {float(r['collective_s']):.2e} | **{r['dominant']}** "
+                   f"| {float(r['useful_ratio']):.2f} |")
+    out.append(f"\n(top {top_n} by largest term; full table in "
+               "results/roofline.md)")
+    return "\n".join(out)
+
+
+def bench_table() -> str:
+    path = os.path.join(ROOT, "results/benchmarks/summary.csv")
+    if not os.path.exists(path):
+        return "(run benchmarks.run first)"
+    lines = open(path).read().strip().splitlines()[1:]
+    out = ["| bench | us/call | derived |", "|---|---|---|"]
+    for l in lines:
+        name, us, derived = l.split(",", 2)
+        out.append(f"| {name} | {float(us):.0f} | `{derived}` |")
+    return "\n".join(out)
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+
+    def repl(marker: str, content: str, text: str) -> str:
+        pat = re.compile(rf"<!-- {marker} -->.*?(?=\n## |\n### |\Z)", re.S)
+        block = f"<!-- {marker} -->\n{content}\n"
+        if pat.search(text):
+            return pat.sub(lambda m: block, text, count=1)
+        return text
+
+    text = repl("DRYRUN_TABLE", dryrun_table(), text)
+    text = repl("ROOFLINE_TABLE", roofline_table(), text)
+    text = repl("BENCH_TABLE", bench_table(), text)
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md tables refreshed")
+
+
+if __name__ == "__main__":
+    main()

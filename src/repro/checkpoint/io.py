@@ -1,0 +1,78 @@
+"""Sharding-aware checkpointing to flat .npz archives.
+
+Pytrees are flattened to ``path/to/leaf`` keys (jax.tree_util key paths).
+On save, distributed arrays are gathered to host (fine at the scales we
+materialize; the dry-run-only frontier configs are never materialized).
+On restore, arrays are placed back with the provided sharding tree.
+Writes are atomic (tmp file + rename) and versioned by step.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "::"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_fmt(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _fmt(p) -> str:
+    if hasattr(p, "key"):
+        return f"k:{p.key}"
+    if hasattr(p, "idx"):
+        return f"i:{p.idx}"
+    return f"x:{p}"
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **_flatten(tree))
+    actual_tmp = tmp if os.path.exists(tmp) else tmp + ".npz"
+    os.replace(actual_tmp, path)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, like: PyTree, step: int | None = None,
+                       shardings: PyTree | None = None) -> PyTree:
+    """Restore into the structure of ``like`` (arrays or SDS).  If a
+    shardings tree is given, leaves are device_put with it."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(paths))
+    out = []
+    for (path_keys, leaf), shard in zip(paths, shard_leaves):
+        key = _SEP.join(_fmt(p) for p in path_keys)
+        arr = data[key]
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        out.append(jax.device_put(arr, shard) if shard is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,3 @@
+from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES, get_config, list_archs
+
+__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "get_config", "list_archs"]

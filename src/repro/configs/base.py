@@ -1,0 +1,193 @@
+"""Architecture + run configuration.
+
+Every assigned architecture has a module ``repro/configs/<id>.py`` exposing
+``CONFIG: ArchConfig`` with the exact published dimensions (source cited in
+its docstring).  ``ArchConfig.reduced()`` produces the CPU smoke-test
+variant (≤2 layers, d_model ≤ 512, ≤4 experts) of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+VOCAB_PAD = 256
+
+
+def _pad(v: int, m: int = VOCAB_PAD) -> int:
+    return (v + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k":    InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k":  InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k":   InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    arch_type: str                  # dense | moe | ssm | hybrid | vlm | audio | mlp | cnn
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    source: str = ""                # citation
+
+    # --- attention options -------------------------------------------------
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int | None = None
+    use_rope: bool = True
+    attn_q_chunk: int | None = 512   # flash-style query chunking (None = full)
+    # MLA (DeepSeek)
+    use_mla: bool = False
+    kv_lora_rank: int = 512
+    qk_rope_dim: int = 64
+    qk_nope_dim: int = 128
+    v_head_dim: int = 128
+
+    # --- mlp / moe ----------------------------------------------------------
+    mlp_act: str = "swiglu"         # swiglu | gelu
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int | None = None     # per-expert hidden (defaults to d_ff)
+    moe_every: int = 1              # MoE FFN on layers where (l % moe_every == moe_offset)
+    moe_offset: int = 0
+    first_dense_layers: int = 0     # leading dense layers before MoE (deepseek)
+    moe_capacity_factor: float = 1.25
+    moe_router_dtype: str = "float32"
+    moe_dispatch: str = "sorted"    # sorted | einsum | auto (see layers.moe_apply)
+
+    # --- ssm / hybrid --------------------------------------------------------
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_groups: int = 1
+    ssm_chunk: int = 256
+    attn_every: int = 0             # hybrid: 1 attention layer per `attn_every` layers
+
+    # --- multimodal / enc-dec ------------------------------------------------
+    encoder_layers: int = 0
+    encoder_frames: int = 0         # audio stub frontend sequence length
+    cross_attn_every: int = 0       # vlm: every n-th layer is cross-attention
+    num_patches: int = 0            # vlm stub frontend patches
+
+    # --- meta-learning (Dif-MAML) -------------------------------------------
+    placement: str = "data"         # agent axis: data | pod
+    meta_mode: str = "maml"         # maml | fomaml | reptile
+    meta_tasks: int = 2             # tasks per agent per step
+    inner_lr: float = 1e-2
+    inner_steps: int = 1
+    topology: str = "ring"
+    combine: str = "dense"
+    outer_optimizer: str = "adam"
+    outer_lr: float = 1e-3
+    hvp_subsample: float = 1.0
+    inner_freeze: str = ""          # param subtree frozen in the inner loop
+                                    # (ANIL-style, e.g. "encoder")
+    remat: bool = True
+    remat_span: int = 1     # layers per checkpoint region (memory knob):
+                            # span k saves 1/k of the per-layer residuals at
+                            # the cost of re-running ≤k layers in backward
+
+    # --- numerics -------------------------------------------------------------
+    dtype: str = "bfloat16"
+    attn_shard: str = "heads"       # heads | head_dim | none  (TP strategy)
+    tie_embeddings: bool = False
+
+    # -------------------------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        return _pad(self.vocab_size)
+
+    @property
+    def moe_hidden(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    def num_agents(self, mesh_axes: dict[str, int]) -> int:
+        """Agent count given mesh axis sizes (e.g. {'pod':2,'data':16,...})."""
+        if self.placement == "pod":
+            return mesh_axes.get("pod", 1)
+        K = mesh_axes.get("data", 1) * (
+            mesh_axes.get("pod", 1) if "pod" in mesh_axes else 1)
+        return K
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: same family, tiny dims."""
+        kw: dict[str, Any] = dict(
+            num_layers=2,
+            d_model=min(self.d_model, 128),
+            num_heads=min(self.num_heads, 4),
+            num_kv_heads=min(self.num_kv_heads, 2),
+            head_dim=32,
+            d_ff=min(self.d_ff, 256),
+            vocab_size=min(self.vocab_size, 512),
+            remat=False,
+        )
+        if self.num_experts:
+            kw.update(num_experts=min(self.num_experts, 4),
+                      num_shared_experts=min(self.num_shared_experts, 1),
+                      experts_per_token=min(self.experts_per_token, 2),
+                      moe_d_ff=min(self.moe_hidden, 128),
+                      first_dense_layers=min(self.first_dense_layers, 1))
+        if self.use_mla:
+            kw.update(kv_lora_rank=64, qk_rope_dim=16, qk_nope_dim=32,
+                      v_head_dim=32)
+        if self.ssm_state:
+            kw.update(ssm_state=32, ssm_head_dim=16, ssm_chunk=32)
+        if self.attn_every:
+            kw.update(num_layers=self.attn_every)  # one full hybrid period
+        if self.encoder_layers:
+            kw.update(encoder_layers=2, encoder_frames=16)
+        if self.cross_attn_every:
+            kw.update(num_layers=2 * self.cross_attn_every,
+                      num_patches=min(self.num_patches or 16, 16))
+        if self.sliding_window:
+            kw.update(sliding_window=64)
+        return dataclasses.replace(self, **kw)
+
+
+ASSIGNED = [
+    "whisper_large_v3", "deepseek_v2_lite_16b", "qwen2_1_5b", "command_r_35b",
+    "mixtral_8x22b", "jamba_1_5_large_398b", "mamba2_130m",
+    "llama_3_2_vision_90b", "codeqwen1_5_7b", "qwen2_7b",
+]
+PAPER_OWN = ["sine_mlp", "omniglot_cnn"]
+
+
+def _canon(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_canon(name)}")
+    return mod.CONFIG
+
+
+def list_archs(include_paper: bool = False) -> list[str]:
+    return ASSIGNED + (PAPER_OWN if include_paper else [])

@@ -1,0 +1,25 @@
+"""codeqwen1.5-7b [hf:Qwen/CodeQwen1.5-7B] — qwen1.5-architecture dense MHA.
+
+32 layers, d_model=4096, 32 heads (kv=32 — full MHA), d_ff=13440,
+vocab=92416, QKV bias (qwen1.5 lineage), RoPE theta 1M (64k context).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="codeqwen1.5-7b",
+    arch_type="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=128,
+    d_ff=13440,
+    vocab_size=92416,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    attn_shard="heads",
+    placement="data",
+    meta_mode="maml",
+    outer_optimizer="adam",
+    source="hf:Qwen/CodeQwen1.5-7B",
+)

@@ -1,0 +1,28 @@
+"""command-r-35b [hf:CohereForAI/c4ai-command-r-v01] — dense GQA, no bias.
+
+40 layers, d_model=8192, 64 heads (GQA kv=8, head_dim=128), d_ff=22528,
+vocab=256000.  LayerNorm (Cohere-style), SiLU-gated MLP.  Outer optimizer:
+SGD (35B fp32 Adam state would not fit next to the MAML adapted copy).
+Note: the real model uses a parallel attention+FFN block; we use the
+standard sequential pre-norm block (recorded as an adaptation in DESIGN.md).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="command-r-35b",
+    arch_type="dense",
+    num_layers=40,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=22528,
+    vocab_size=256000,
+    norm="layernorm",
+    rope_theta=8_000_000.0,
+    attn_shard="heads",
+    placement="data",
+    meta_mode="maml",
+    outer_optimizer="sgd",
+    source="hf:CohereForAI/c4ai-command-r-v01",
+)

@@ -1,0 +1,40 @@
+"""deepseek-v2-lite-16b [arXiv:2405.04434] — MoE with Multi-head Latent
+Attention.
+
+27 layers, d_model=2048, 16 heads, MLA kv_lora_rank=512 (+64 rope dims),
+MoE: 64 routed experts top-6 + 2 shared, per-expert hidden 1408,
+vocab=102400.  First layer uses a dense FFN (hidden 10944, per the
+model card); the assignment's "d_ff=1408" is the per-expert hidden.
+(The bracket note "2 shared+160 routed" describes DeepSeek-V2-236B; the
+authoritative lite config line "MoE 64e top-6" is used.)
+Outer optimizer: bf16 momentum (fp32 Adam state for 16B exceeds v5e HBM
+alongside the MAML adapted copy).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-lite-16b",
+    arch_type="moe",
+    num_layers=27,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,            # q/k nope dim (MLA overrides per-component dims)
+    d_ff=10944,              # dense FFN (layer 0)
+    vocab_size=102400,
+    use_mla=True,
+    kv_lora_rank=512,
+    qk_rope_dim=64,
+    qk_nope_dim=128,
+    v_head_dim=128,
+    num_experts=64,
+    num_shared_experts=2,
+    experts_per_token=6,
+    moe_d_ff=1408,
+    first_dense_layers=1,
+    attn_shard="heads",
+    placement="data",
+    meta_mode="fomaml",
+    outer_optimizer="momentum",
+    source="arXiv:2405.04434",
+)

@@ -1,0 +1,40 @@
+"""jamba-1.5-large-398b [arXiv:2403.19887] — hybrid Mamba+attention MoE.
+
+72 layers in 9 periods of 8 (1 attention : 7 Mamba, per the Jamba ratio),
+MoE (16 experts, top-2) on every other layer, d_model=8192, 64 heads
+(GQA kv=8), d_ff=24576, vocab=65536.  Mamba mixers use the Mamba2/SSD
+formulation (state 128, head_dim 64) — a TPU adaptation recorded in
+DESIGN.md (chunked SSD maps to MXU matmuls; Mamba1's selective scan does
+not).
+
+Agent placement = 'pod' (398B): diffusion graph spans pods; intra-pod
+FSDP×TP.  long_500k eligible: only 9/72 layers carry a KV cache, Mamba
+layers carry O(1) state.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b",
+    arch_type="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    num_experts=16,
+    experts_per_token=2,
+    moe_every=2,
+    moe_offset=1,
+    attn_every=8,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    use_rope=True,
+    attn_shard="heads",
+    placement="pod",
+    meta_mode="fomaml",
+    outer_optimizer="sgd",
+    source="arXiv:2403.19887",
+)

@@ -1,0 +1,33 @@
+"""llama-3.2-vision-90b [hf:meta-llama/Llama-3.2-11B-Vision, scaled per the
+90B card] — decoder with interleaved gated cross-attention image layers.
+
+100 layers = 20 periods of (4 self-attention + 1 gated cross-attention),
+d_model=8192, 64 heads (GQA kv=8), d_ff=28672, vocab=128256.  The ViT
+vision encoder + projector are STUBBED: input_specs feeds (B, 576, 8192)
+projected patch embeddings; the framework implements the language decoder
+that consumes them (tanh-gated cross-attn per the Llama-3.2 card).
+
+Agent placement = 'pod' (a 90B per-agent replica + MAML adapted copy
+exceeds one 16-chip mesh row).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-90b",
+    arch_type="vlm",
+    num_layers=100,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    cross_attn_every=5,
+    num_patches=576,
+    rope_theta=500_000.0,
+    attn_shard="heads",
+    placement="pod",
+    meta_mode="fomaml",
+    outer_optimizer="sgd",
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+)

@@ -1,0 +1,32 @@
+"""mamba2-130m [arXiv:2405.21060] — attention-free SSD (state-space duality).
+
+24 layers, d_model=768 (d_inner=1536, 24 SSD heads of head_dim 64),
+ssm_state=128, vocab=50280.  No attention, no FFN — each block is a single
+Mamba2 mixer (the published architecture).  long_500k eligible: O(1)
+recurrent state per layer.
+
+num_heads/d_ff are unused placeholders (attention-free).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-130m",
+    arch_type="ssm",
+    num_layers=24,
+    d_model=768,
+    num_heads=12,      # unused (attention-free)
+    num_kv_heads=12,   # unused
+    head_dim=64,       # unused
+    d_ff=0,            # no FFN
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_chunk=256,
+    attn_shard="none",
+    placement="data",
+    meta_mode="maml",
+    outer_optimizer="adam",
+    source="arXiv:2405.21060",
+)

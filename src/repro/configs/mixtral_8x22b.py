@@ -1,0 +1,34 @@
+"""mixtral-8x22b [arXiv:2401.04088] — sparse MoE with sliding-window attn.
+
+56 layers, d_model=6144, 48 heads (GQA kv=8, head_dim=128), 8 experts
+top-2 with per-expert hidden 16384, vocab=32768, SWA window 4096.
+
+Agent placement = 'pod': at 141B parameters a per-agent replica does not
+fit one mesh row, so the diffusion graph spans pods (the paper's own
+motivation — sparse inter-pod links carry the combine; dense intra-pod ICI
+carries FSDP/TP).  On the single-pod mesh this degenerates to K=1
+(centralized); the technique engages on the 2-pod mesh.
+SWA makes long_500k eligible (window-bounded KV cache).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x22b",
+    arch_type="moe",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=32768,
+    sliding_window=4096,
+    num_experts=8,
+    experts_per_token=2,
+    rope_theta=1_000_000.0,
+    attn_shard="heads",
+    placement="pod",
+    meta_mode="fomaml",
+    outer_optimizer="sgd",
+    source="arXiv:2401.04088",
+)

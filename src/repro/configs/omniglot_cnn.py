@@ -1,0 +1,26 @@
+"""The paper's own classification model (§4.2, App. D.3): the Finn et al.
+2017 conv net (per Vinyals et al. 2016), max-pooling variant for Omniglot.
+Offline surrogate: synthetic few-shot episodes (data/fewshot.py) on 14×14
+images, 2 conv blocks + linear head; 5-way 1-shot, α=0.4, meta-batch 16.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="omniglot-cnn",
+    arch_type="cnn",
+    num_layers=2,          # conv blocks
+    d_model=32,            # conv channels
+    num_heads=1, num_kv_heads=1, head_dim=1,
+    d_ff=0,
+    vocab_size=5,          # n_way classes
+    inner_lr=0.4,
+    inner_steps=1,
+    meta_tasks=4,
+    topology="paper",
+    outer_optimizer="adam",
+    outer_lr=1e-3,
+    meta_mode="maml",
+    remat=False,
+    dtype="float32",
+    source="Dif-MAML §4.2 / Finn et al. 2017",
+)

@@ -1,0 +1,27 @@
+"""qwen2-1.5b [arXiv:2407.10671] — dense GQA decoder with QKV bias.
+
+28 layers, d_model=1536, 12 heads (GQA kv=2, head_dim=128), d_ff=8960,
+vocab=151936.  12 heads ∤ 16-wide model axis and RoPE occupies head_dim,
+so attention stays replicated across TP (attn_shard='none'); MLP + vocab
+carry the tensor parallelism.  (Hillclimb candidate: head padding 12→16.)
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-1.5b",
+    arch_type="dense",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    attn_shard="none",
+    placement="data",
+    meta_mode="maml",
+    outer_optimizer="adam",
+    source="arXiv:2407.10671",
+)

@@ -1,0 +1,26 @@
+"""qwen2-7b [arXiv:2407.10671] — dense GQA decoder with QKV bias.
+
+28 layers, d_model=3584, 28 heads (GQA kv=4, head_dim=128), d_ff=18944,
+vocab=152064.  28 heads ∤ 16-wide model axis and RoPE occupies head_dim →
+attention replicated across TP; MLP + vocab carry tensor parallelism.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-7b",
+    arch_type="dense",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    attn_shard="none",
+    placement="data",
+    meta_mode="maml",
+    outer_optimizer="adam",
+    source="arXiv:2407.10671",
+)

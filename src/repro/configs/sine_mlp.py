@@ -1,0 +1,25 @@
+"""The paper's own regression model (§4.1, App. D.1): an MLP with 2 hidden
+layers of 40 ReLU units, MSE loss, 10-shot sine-wave tasks, α=0.01,
+Adam μ=0.001 (SGD variant μ=0.005), K=6 agents on the Fig. 2a graph.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="sine-mlp",
+    arch_type="mlp",
+    num_layers=2,          # hidden layers
+    d_model=40,            # hidden width
+    num_heads=1, num_kv_heads=1, head_dim=1,
+    d_ff=0,
+    vocab_size=1,          # regression: 1-d input / 1-d output
+    inner_lr=0.01,
+    inner_steps=1,
+    meta_tasks=5,
+    topology="paper",
+    outer_optimizer="adam",
+    outer_lr=1e-3,
+    meta_mode="maml",
+    remat=False,
+    dtype="float32",
+    source="Dif-MAML §4.1 / Finn et al. 2017",
+)

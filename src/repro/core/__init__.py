@@ -1,0 +1,13 @@
+"""Dif-MAML core: decentralized meta-learning over a graph of agents.
+
+The paper's contribution (Algorithm 1) lives here:
+  - topology.py      combination matrices A (Assumption 6) + mixing rate lambda_2
+  - maml.py          inner adaptation and the stochastic meta-gradient (eq. 4)
+  - diffusion.py     Adapt-then-Combine over the agent axis (eq. 6a/6b)
+  - meta_trainer.py  the full decentralized trainer + baselines
+"""
+from repro.core.meta_trainer import MetaConfig, TrainState, init_state, make_meta_step, make_eval_fn
+from repro.core import topology, maml, diffusion
+
+__all__ = ["MetaConfig", "TrainState", "init_state", "make_meta_step",
+           "make_eval_fn", "topology", "maml", "diffusion"]

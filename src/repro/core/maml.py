@@ -1,0 +1,196 @@
+"""MAML inner/outer loops (paper §1.1, eq. 2-4).
+
+Generic over the model: a ``loss_fn(params, batch) -> scalar`` closure.  The
+exact meta-gradient (eq. 4) — including the ``(I - α ∇²Q)`` curvature factor —
+falls out of differentiating through the inner SGD step with ``jax.grad``;
+no Hessian is ever materialized (JAX computes the Hessian-vector product).
+
+Three modes:
+  'maml'    exact second-order meta-gradient (paper's algorithm)
+  'fomaml'  first-order: curvature term dropped via stop_gradient on the
+            inner gradient (Nichol et al. 2018; used for frontier-scale archs)
+  'reptile' update direction = (w_adapted - w); no outer batch needed
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+LossFn = Callable[[PyTree, Any], jax.Array]
+
+__all__ = ["inner_adapt", "meta_loss", "meta_grad", "multi_task_meta_grad"]
+
+
+def _sgd_step(params: PyTree, grads: PyTree, alpha: float) -> PyTree:
+    return jax.tree.map(lambda p, g: p - alpha * g, params, grads)
+
+
+def inner_adapt(
+    loss_fn: LossFn,
+    params: PyTree,
+    batch: Any,
+    alpha: float,
+    steps: int = 1,
+    first_order: bool = False,
+    remat: bool = True,
+) -> PyTree:
+    """Task adaptation: ``w' = w - α ∇Q(w; X_in)`` applied ``steps`` times.
+
+    With ``first_order=True`` the inner gradient is treated as a constant of
+    the outer differentiation (FOMAML).
+
+    ``remat=True`` wraps each inner step in ``jax.checkpoint``: the exact
+    (second-order) meta-gradient differentiates *through* the inner backward
+    pass, and without remat XLA must keep every layer's inner-backward
+    intermediates alive until the outer backward — O(L·S·d) extra residency
+    that dominated HBM in the 4k-seq dry-runs.  With remat, the outer
+    backward recomputes the inner fwd+bwd transiently (one extra fwd+bwd of
+    compute, ~500× less attention residency at 28 layers × 8 chunks).
+    """
+
+    def step_fn(p):
+        g = jax.grad(loss_fn)(p, batch)
+        if first_order:
+            g = jax.lax.stop_gradient(g)
+        return _sgd_step(p, g, alpha)
+
+    if remat and not first_order:
+        step_fn = jax.checkpoint(step_fn)
+
+    def one_step(p, _):
+        return step_fn(p), None
+
+    if steps == 1:  # common case; keep the HLO flat
+        return step_fn(params)
+    adapted, _ = jax.lax.scan(one_step, params, None, length=steps)
+    return adapted
+
+
+def meta_loss(
+    loss_fn: LossFn,
+    params: PyTree,
+    support: Any,
+    query: Any,
+    alpha: float,
+    steps: int = 1,
+    mode: str = "maml",
+) -> jax.Array:
+    """Meta objective for a single task: ``Q(w - α∇Q(w; X_in); X_o)``."""
+    if mode == "reptile":
+        # Reptile has no outer loss; callers use meta_grad directly.
+        adapted = inner_adapt(loss_fn, params, support, alpha, steps, first_order=True)
+        return loss_fn(adapted, query)
+    first_order = mode == "fomaml"
+    adapted = inner_adapt(loss_fn, params, support, alpha, steps, first_order=first_order)
+    return loss_fn(adapted, query)
+
+
+def meta_grad(
+    loss_fn: LossFn,
+    params: PyTree,
+    support: Any,
+    query: Any,
+    alpha: float,
+    steps: int = 1,
+    mode: str = "maml",
+    hvp_subsample: float = 1.0,
+    freeze_mask: PyTree | None = None,
+) -> tuple[jax.Array, PyTree]:
+    """Stochastic meta-gradient ``∇Q̄`` for one task (eq. 4).  Returns
+    (outer loss value, meta-gradient pytree).
+
+    mode='maml' computes the exact second-order gradient
+
+        ∇Q̄ = ∏_j (I − α ∇²Q_in(w_j)) · ∇Q_o(w')
+
+    with the curvature factors applied as Hessian-vector products in
+    **forward-over-reverse** form, ``jvp(grad(Q_in), (w_j,), (v,))``.
+    Reverse-over-reverse (plain ``grad`` through the inner update) forces
+    XLA to keep the inner backward's per-layer residuals alive until the
+    outer backward — O(L · S² · heads) bytes at 4k sequence — whereas
+    forward-mode tangents stream alongside the recomputed inner backward
+    with O(1) extra residency.  Same math (tested against the naive form
+    and the analytic quadratic), production memory behavior.
+
+    mode='maml_naive' keeps the differentiate-through-the-update form for
+    cross-validation on small models.
+    """
+    if mode == "reptile":
+        adapted = inner_adapt(loss_fn, params, support, alpha, steps, first_order=True)
+        # Direction (w - w') / α plays the role of the meta-gradient.
+        g = jax.tree.map(lambda p, a: (p - a) / max(alpha, 1e-12), params, adapted)
+        return loss_fn(adapted, query), g
+    if freeze_mask is not None:
+        # ANIL-style partial adaptation (Raghu et al. 2020, cited by the
+        # paper): frozen leaves are stop-gradiented inside the *inner* loss,
+        # so the inner gradient, the inner update, and the curvature
+        # cross-terms vanish on them exactly; the outer gradient still
+        # trains them.  Used for modality frontends (whisper encoder).
+        def _mix(p):
+            return jax.tree.map(
+                lambda leaf, frozen: jax.lax.stop_gradient(leaf) if frozen
+                else leaf, p, freeze_mask)
+        inner_loss = lambda p, b: loss_fn(_mix(p), b)
+    else:
+        inner_loss = loss_fn
+    if mode == "maml":
+        grad_in = lambda p: jax.grad(inner_loss)(p, support)
+        trajectory = []
+        p = params
+        for _ in range(steps):
+            trajectory.append(p)
+            p = _sgd_step(p, grad_in(p), alpha)
+        loss, v = jax.value_and_grad(loss_fn)(p, query)
+        if hvp_subsample < 1.0:
+            # beyond-paper knob: estimate ∇²Q_in on a support subsample.
+            # The HVP is the most expensive pass of the meta step (measured
+            # 59% of compiled FLOPs); a fractional batch keeps the estimator
+            # unbiased w.r.t. the adjusted objective at 1/f the cost, at the
+            # price of curvature-term variance (validated on the sine bench).
+            def sub(x):
+                n = max(1, int(x.shape[0] * hvp_subsample))
+                return x[:n]
+            sub_batch = jax.tree.map(sub, support)
+            grad_hvp = lambda p: jax.grad(inner_loss)(p, sub_batch)
+        else:
+            grad_hvp = grad_in
+        for w_j in reversed(trajectory):
+            _, hv = jax.jvp(grad_hvp, (w_j,), (v,))    # ∇²Q_in(w_j) · v
+            v = jax.tree.map(lambda a, b: a - alpha * b, v, hv)
+        return loss, v
+    # fomaml / maml_naive: adapt with the (possibly masked) inner loss, take
+    # the outer loss unmasked so frozen leaves still receive meta-gradients
+    first_order = mode == "fomaml"
+
+    def full(p):
+        adapted = inner_adapt(inner_loss, p, support, alpha, steps,
+                              first_order=first_order)
+        return loss_fn(adapted, query)
+
+    return jax.value_and_grad(full)(params)
+
+
+def multi_task_meta_grad(
+    loss_fn: LossFn,
+    params: PyTree,
+    support: Any,
+    query: Any,
+    alpha: float,
+    steps: int = 1,
+    mode: str = "maml",
+    hvp_subsample: float = 1.0,
+    freeze_mask: PyTree | None = None,
+) -> tuple[jax.Array, PyTree]:
+    """Meta-gradient averaged over a batch of tasks (leading axis of
+    ``support``/``query`` is the task axis): ``(1/|S_k|) Σ_t ∇Q̄^(t)``."""
+
+    def per_task(s, q):
+        return meta_grad(loss_fn, params, s, q, alpha, steps, mode,
+                         hvp_subsample, freeze_mask)
+
+    losses, grads = jax.vmap(per_task)(support, query)
+    return jnp.mean(losses), jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)

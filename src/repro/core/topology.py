@@ -1,0 +1,217 @@
+"""Graph topologies and doubly-stochastic combination matrices.
+
+The combination matrix ``A = [a_{lk}]`` weights how agent ``k`` combines the
+intermediate states of its neighbors ``l`` (paper eq. 6b).  Column ``k`` of
+``A`` holds agent ``k``'s incoming weights.  Assumption 6 of the paper
+requires ``A`` doubly stochastic and primitive; the Metropolis(-Hastings)
+rule below satisfies both for any connected undirected graph with at least
+one self-loop weight > 0.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "ring_edges",
+    "grid_edges",
+    "full_edges",
+    "star_edges",
+    "erdos_edges",
+    "paper_fig2a_edges",
+    "adjacency",
+    "metropolis_weights",
+    "uniform_weights",
+    "mixing_rate",
+    "is_doubly_stochastic",
+    "is_primitive",
+    "neighbor_lists",
+]
+
+
+# ---------------------------------------------------------------------------
+# Edge constructors.  All return a list of undirected edges (l, k), l < k.
+# ---------------------------------------------------------------------------
+
+def ring_edges(K: int) -> list[tuple[int, int]]:
+    if K < 2:
+        return []
+    edges = [(i, (i + 1) % K) for i in range(K)]
+    return sorted({(min(a, b), max(a, b)) for a, b in edges})
+
+
+def grid_edges(rows: int, cols: int, torus: bool = False) -> list[tuple[int, int]]:
+    """2-D grid (optionally wrapped into a torus)."""
+    edges = set()
+    for r in range(rows):
+        for c in range(cols):
+            k = r * cols + c
+            if c + 1 < cols:
+                edges.add((k, r * cols + c + 1))
+            elif torus and cols > 2:
+                edges.add((min(k, r * cols), max(k, r * cols)))
+            if r + 1 < rows:
+                edges.add((k, (r + 1) * cols + c))
+            elif torus and rows > 2:
+                edges.add((min(k, c), max(k, c)))
+    return sorted(edges)
+
+
+def full_edges(K: int) -> list[tuple[int, int]]:
+    return [(l, k) for l in range(K) for k in range(l + 1, K)]
+
+
+def star_edges(K: int) -> list[tuple[int, int]]:
+    return [(0, k) for k in range(1, K)]
+
+
+def erdos_edges(K: int, p: float = 0.4, seed: int = 0) -> list[tuple[int, int]]:
+    """Erdos-Renyi graph, re-sampled until connected."""
+    rng = np.random.default_rng(seed)
+    for _ in range(1000):
+        mask = rng.random((K, K)) < p
+        edges = [(l, k) for l in range(K) for k in range(l + 1, K) if mask[l, k]]
+        if _connected(K, edges):
+            return edges
+    raise RuntimeError("could not sample a connected graph")
+
+
+def paper_fig2a_edges() -> list[tuple[int, int]]:
+    """The K=6 topology of the paper's Fig. 2a (a connected, non-complete
+    graph; the paper does not give the exact edge list, we use a 6-node
+    graph with the same flavor: a cycle plus two chords)."""
+    return [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 0), (1, 4), (2, 5)]
+
+
+TOPOLOGIES = {
+    "ring": lambda K, **kw: ring_edges(K),
+    "full": lambda K, **kw: full_edges(K),
+    "star": lambda K, **kw: star_edges(K),
+    "grid": lambda K, **kw: grid_edges(*_factor(K), torus=False),
+    "torus": lambda K, **kw: grid_edges(*_factor(K), torus=True),
+    "erdos": lambda K, **kw: erdos_edges(K, **kw),
+    "paper": lambda K, **kw: paper_fig2a_edges(),
+}
+
+
+def _factor(K: int) -> tuple[int, int]:
+    r = int(np.sqrt(K))
+    while K % r:
+        r -= 1
+    return r, K // r
+
+
+def _connected(K: int, edges) -> bool:
+    seen = {0}
+    frontier = [0]
+    adj = {i: [] for i in range(K)}
+    for l, k in edges:
+        adj[l].append(k)
+        adj[k].append(l)
+    while frontier:
+        n = frontier.pop()
+        for m in adj[n]:
+            if m not in seen:
+                seen.add(m)
+                frontier.append(m)
+    return len(seen) == K
+
+
+# ---------------------------------------------------------------------------
+# Combination matrices.
+# ---------------------------------------------------------------------------
+
+def adjacency(K: int, edges) -> np.ndarray:
+    M = np.zeros((K, K), dtype=np.float64)
+    for l, k in edges:
+        M[l, k] = M[k, l] = 1.0
+    return M
+
+
+def metropolis_weights(K: int, edges) -> np.ndarray:
+    """Metropolis-Hastings rule: a_{lk} = 1 / (1 + max(d_l, d_k)) for an edge,
+    self-weight absorbs the remainder.  Symmetric => doubly stochastic."""
+    adj = adjacency(K, edges)
+    deg = adj.sum(axis=1)
+    A = np.zeros((K, K), dtype=np.float64)
+    for l, k in edges:
+        A[l, k] = A[k, l] = 1.0 / (1.0 + max(deg[l], deg[k]))
+    np.fill_diagonal(A, 1.0 - A.sum(axis=1))
+    return A
+
+
+def uniform_weights(K: int, edges) -> np.ndarray:
+    """Lazy uniform averaging with max-degree normalization (also doubly
+    stochastic for undirected graphs)."""
+    adj = adjacency(K, edges)
+    dmax = adj.sum(axis=1).max()
+    A = adj / (dmax + 1.0)
+    np.fill_diagonal(A, 1.0 - A.sum(axis=1))
+    return A
+
+
+def combination_matrix(K: int, topology: str = "ring", rule: str = "metropolis",
+                       **kw) -> np.ndarray:
+    edges = TOPOLOGIES[topology](K, **kw)
+    if K == 1:
+        return np.ones((1, 1))
+    fn = metropolis_weights if rule == "metropolis" else uniform_weights
+    return fn(K, edges)
+
+
+# ---------------------------------------------------------------------------
+# Spectral / validation helpers (theory quantities from §3).
+# ---------------------------------------------------------------------------
+
+def mixing_rate(A: np.ndarray) -> float:
+    """λ₂ = spectral radius of A^T - (1/K) 1 1^T  (paper Thm 1)."""
+    K = A.shape[0]
+    B = A.T - np.ones((K, K)) / K
+    return float(np.max(np.abs(np.linalg.eigvals(B))))
+
+
+def is_doubly_stochastic(A: np.ndarray, tol: float = 1e-9) -> bool:
+    return (
+        bool(np.all(A >= -tol))
+        and bool(np.allclose(A.sum(axis=0), 1.0, atol=tol))
+        and bool(np.allclose(A.sum(axis=1), 1.0, atol=tol))
+    )
+
+
+def is_primitive(A: np.ndarray) -> bool:
+    """Primitive: some power of A is entrywise positive.  For a stochastic A
+    it suffices that the graph is connected and at least one self-loop."""
+    K = A.shape[0]
+    M = (A > 0).astype(np.float64)
+    P = np.linalg.matrix_power(M + np.eye(K) * 0, K * K)  # A^(K^2)
+    # power of the boolean pattern:
+    P = np.linalg.matrix_power(M, max(1, (K - 1) * (K - 1) + 1))
+    return bool(np.all(P > 0))
+
+
+def neighbor_lists(A: np.ndarray) -> list[list[int]]:
+    """For each agent k, incoming neighbors l (a_{lk} > 0), excluding self."""
+    K = A.shape[0]
+    return [[l for l in range(K) if l != k and A[l, k] > 0] for k in range(K)]
+
+
+def permute_offsets(A: np.ndarray, K: int) -> list[int]:
+    """For circulant (ring/torus-on-agent-axis) matrices: the set of nonzero
+    offsets d such that a_{(k-d) mod K, k} > 0 for all k.  Used by the sparse
+    ppermute combine.  Returns [] if A is not circulant."""
+    offsets = []
+    for d in range(1, K):
+        col = np.array([A[(k - d) % K, k] for k in range(K)])
+        if np.all(col > 0):
+            offsets.append(d)
+        elif np.any(col > 0):
+            return []  # not circulant-sparse
+    return offsets
+
+
+def is_circulant(A: np.ndarray, tol: float = 1e-12) -> bool:
+    K = A.shape[0]
+    first = A[:, 0]
+    for k in range(1, K):
+        if not np.allclose(np.roll(first, k), A[:, k], atol=tol):
+            return False
+    return True

@@ -1,0 +1,6 @@
+from repro.data.sine import SineTaskDistribution, agent_sine_distributions
+from repro.data.fewshot import FewShotSampler
+from repro.data.lm_tasks import LMTaskSampler
+
+__all__ = ["SineTaskDistribution", "agent_sine_distributions",
+           "FewShotSampler", "LMTaskSampler"]

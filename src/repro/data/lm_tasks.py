@@ -1,0 +1,74 @@
+"""Synthetic per-domain language-model meta-tasks.
+
+The production analogue of the paper's heterogeneous agents: each agent
+holds a distribution over *domains* (a "task" = a domain); a domain is a
+seeded synthetic Markov source over the vocabulary.  Adapting the launch
+model to a new domain with a few gradient steps is exactly the MAML setting,
+at LM scale.
+
+Sequences are generated with a light-weight order-1 Markov chain whose
+transition structure is domain-seeded (deterministic given ``domain_id``),
+so data is reproducible across hosts without files.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LMTaskSampler:
+    vocab_size: int
+    seq_len: int
+    n_domains: int = 64
+    branching: int = 32     # out-degree of the Markov chain per state bucket
+    n_buckets: int = 256    # states are token % n_buckets
+    seed: int = 0
+
+    def _domain_table(self, domain_id: int) -> np.ndarray:
+        """(n_buckets, branching) allowed next-tokens for this domain."""
+        rng = np.random.default_rng(self.seed * 100003 + int(domain_id))
+        return rng.integers(0, self.vocab_size,
+                            size=(self.n_buckets, self.branching))
+
+    def sample_tokens(self, domain_id: int, batch: int, rng: np.random.Generator
+                      ) -> np.ndarray:
+        table = self._domain_table(domain_id)
+        toks = np.empty((batch, self.seq_len + 1), dtype=np.int64)
+        toks[:, 0] = rng.integers(0, self.vocab_size, size=batch)
+        for t in range(self.seq_len):
+            bucket = toks[:, t] % self.n_buckets
+            choice = rng.integers(0, self.branching, size=batch)
+            toks[:, t + 1] = table[bucket, choice]
+        return toks
+
+    def sample_task(self, domain_id: int, batch: int, seed: int = 0):
+        """Returns {tokens, labels} of shape (batch, seq_len)."""
+        rng = np.random.default_rng(seed)
+        toks = self.sample_tokens(domain_id, batch, rng)
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+    def sample_agents(self, K: int, tasks_per_agent: int, task_batch: int,
+                      step: int = 0):
+        """Dif-MAML step data: support/query dicts with leading
+        (K, tasks_per_agent, task_batch, seq).  Agent k draws domains from
+        its own shard of the domain universe (heterogeneous π_k)."""
+        per_agent = max(1, self.n_domains // K)
+        sup_t, sup_l, qry_t, qry_l = [], [], [], []
+        rng = np.random.default_rng(self.seed + 7919 * step)
+        for k in range(K):
+            st, sl, qt, ql = [], [], [], []
+            for t in range(tasks_per_agent):
+                dom = k * per_agent + int(rng.integers(0, per_agent))
+                s = self.sample_task(dom, task_batch, seed=int(rng.integers(2**31)))
+                q = self.sample_task(dom, task_batch, seed=int(rng.integers(2**31)))
+                st.append(s["tokens"]); sl.append(s["labels"])
+                qt.append(q["tokens"]); ql.append(q["labels"])
+            sup_t.append(np.stack(st)); sup_l.append(np.stack(sl))
+            qry_t.append(np.stack(qt)); qry_l.append(np.stack(ql))
+        pack = lambda a: np.stack(a, axis=0)
+        support = {"tokens": pack(sup_t), "labels": pack(sup_l)}
+        query = {"tokens": pack(qry_t), "labels": pack(qry_l)}
+        return support, query

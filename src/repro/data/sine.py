@@ -1,0 +1,58 @@
+"""The paper's sine-wave regression benchmark (§4.1, after Finn et al. 2017).
+
+Each task: predict ``y = amplitude * sin(x + phase)`` from ``x ∈ [-5, 5]``.
+Phases ~ U[0, π].  The amplitude interval [0.1, 5.0] is evenly partitioned
+into K sub-intervals, one per agent — agents see *different* task
+distributions (the paper's heterogeneous setting).  Evaluation tasks draw
+from the full interval.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+AMP_LO, AMP_HI = 0.1, 5.0
+PHASE_LO, PHASE_HI = 0.0, np.pi
+X_LO, X_HI = -5.0, 5.0
+
+
+@dataclasses.dataclass
+class SineTaskDistribution:
+    amp_lo: float = AMP_LO
+    amp_hi: float = AMP_HI
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def sample_batch(self, n_tasks: int, shots: int):
+        """Returns (support, query): each (x, y) with shape
+        (n_tasks, shots, 1).  Support/query are disjoint draws from the same
+        sinusoid (the paper's two-batch X_in / X_o scheme, footnote 1)."""
+        amp = self._rng.uniform(self.amp_lo, self.amp_hi, size=(n_tasks, 1, 1))
+        phase = self._rng.uniform(PHASE_LO, PHASE_HI, size=(n_tasks, 1, 1))
+        xs = self._rng.uniform(X_LO, X_HI, size=(n_tasks, 2 * shots, 1))
+        ys = amp * np.sin(xs + phase)
+        xs = xs.astype(np.float32)
+        ys = ys.astype(np.float32)
+        return ((xs[:, :shots], ys[:, :shots]),
+                (xs[:, shots:], ys[:, shots:]))
+
+
+def agent_sine_distributions(K: int, seed: int = 0) -> list[SineTaskDistribution]:
+    """Partition [0.1, 5.0] into K equal amplitude intervals (paper §4.1)."""
+    edges = np.linspace(AMP_LO, AMP_HI, K + 1)
+    return [SineTaskDistribution(float(edges[k]), float(edges[k + 1]), seed + k)
+            for k in range(K)]
+
+
+def stacked_agent_batch(dists, tasks_per_agent: int, shots: int):
+    """Sample one Dif-MAML step's data: pytrees with leading
+    (K, tasks_per_agent, shots, 1) axes."""
+    sup_x, sup_y, qry_x, qry_y = [], [], [], []
+    for d in dists:
+        (sx, sy), (qx, qy) = d.sample_batch(tasks_per_agent, shots)
+        sup_x.append(sx); sup_y.append(sy); qry_x.append(qx); qry_y.append(qy)
+    stack = lambda xs: np.stack(xs, axis=0)
+    return ((stack(sup_x), stack(sup_y)), (stack(qry_x), stack(qry_y)))

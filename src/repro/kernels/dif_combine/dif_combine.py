@@ -1,0 +1,51 @@
+"""Pallas TPU kernel for the Dif-MAML combine step (paper eq. 6b).
+
+    out[k, m] = Σ_l A[l, k] · φ[l, m]
+
+φ is the stack of intermediate states (K agents × flattened parameter
+chunk).  After the neighbor exchange lands the K rows in HBM, this kernel
+fuses the weighted reduction over agents with the write of the new launch
+model — one pass over the parameter bytes instead of K-1 separate
+axpy passes (the combine is HBM-bandwidth-bound: K·|w| reads, |w| writes).
+
+Tiling: grid over (K, M/bm).  Each program reads a (K, bm) tile of φ plus
+the K×K combination matrix (tiny, VMEM-resident) and writes a (1, bm) tile.
+bm is lane-aligned (multiple of 128) so the reduction runs on the VPU at
+full width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(a_ref, phi_ref, out_ref):
+    k = pl.program_id(0)
+    w = jax.lax.dynamic_slice_in_dim(a_ref[...], k, 1, axis=1)   # (K, 1)
+    phi = phi_ref[...]                                           # (K, bm)
+    acc = jnp.sum(phi.astype(jnp.float32) * w.astype(jnp.float32), axis=0,
+                  keepdims=True)                                 # (1, bm)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def dif_combine(A: jax.Array, phi: jax.Array, *, block_m: int = 512,
+                interpret: bool = False) -> jax.Array:
+    """A: (K, K) doubly-stochastic; phi: (K, M).  Returns (K, M)."""
+    K, M = phi.shape
+    assert A.shape == (K, K)
+    assert M % block_m == 0, (M, block_m)
+    grid = (K, M // block_m)
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, K), lambda k, m: (0, 0)),
+            pl.BlockSpec((K, block_m), lambda k, m: (0, m)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m), lambda k, m: (k, m)),
+        out_shape=jax.ShapeDtypeStruct((K, M), phi.dtype),
+        interpret=interpret,
+    )(A, phi)

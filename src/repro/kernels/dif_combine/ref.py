@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the combine kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def dif_combine_ref(A: jax.Array, phi: jax.Array) -> jax.Array:
+    """out[k] = Σ_l A[l, k] φ[l]  (float32 accumulation)."""
+    out = jnp.einsum("lk,lm->km", A.astype(jnp.float32),
+                     phi.astype(jnp.float32))
+    return out.astype(phi.dtype)

@@ -1,0 +1,133 @@
+"""Pallas TPU flash attention (forward), causal + GQA + sliding window.
+
+Online-softmax blocked attention: grid (B, H, S_q/bq, S_k/bk); the KV block
+index is minor-most, so TPU iterates it sequentially per query block and the
+(m, l, acc) running statistics live in VMEM scratch across that loop.
+
+Blocks are MXU-aligned: bq × d and bk × d tiles feed the systolic array
+directly; masking (causal / sliding-window) is applied on the bq × bk logit
+tile with position iotas — no (S, S) mask is ever materialized in HBM.
+This replaces the O(S²) logits round-trip of the jnp reference with an
+O(S·d) working set: the kernel is the standard remedy once the memory
+roofline term is dominated by attention intermediates (prefill_32k).
+
+Backward passes: ``ops.flash_attention`` recomputes with the jnp reference
+(exact gradients, kernel-grade forward); ``ops.flash_attention_fused`` pairs
+this forward (which also emits the per-row logsumexp) with the fully-fused
+Pallas backward in flash_bwd.py — neither direction round-trips an (S, S)
+tensor through HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr,
+                  acc_scr, *, scale: float, block_q: int, block_k: int,
+                  seq_k: int, causal: bool, window: int | None):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                     # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                     # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                     # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (bq,bk)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                     # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                                  # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)                         # (bq, 1)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))                     # (bq, d)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                       ).astype(o_ref.dtype)
+        # per-row logsumexp — the only residual the fused backward needs
+        lse_ref[0, 0] = (m_scr[...]
+                         + jnp.log(jnp.maximum(l_scr[...], 1e-30))
+                         ).astype(lse_ref.dtype)
+
+
+def flash_attention_fwd_lse(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            causal: bool = True, window: int | None = None,
+                            block_q: int = 128, block_k: int = 128,
+                            interpret: bool = False):
+    """As flash_attention_fwd but also returns the per-row logsumexp
+    (B, H, S) consumed by the fused Pallas backward (flash_bwd.py)."""
+    B, H, S, d = q.shape
+    Sk = k.shape[2]
+    block_q = min(block_q, S)
+    block_k = min(block_k, Sk)
+    assert S % block_q == 0 and Sk % block_k == 0
+    scale = 1.0 / np.sqrt(d)
+    grid = (B, H, S // block_q, Sk // block_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        seq_k=Sk, causal=causal, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q, 1), lambda b, h, i, j: (b, h, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, d), q.dtype),
+            jax.ShapeDtypeStruct((B, H, S, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            # running max / denom / accumulator — f32 VMEM, persistent
+            # across the (minor-most) KV grid dimension
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=None, block_q=128,
+                        block_k=128, interpret=False):
+    """q/k/v: (B, H, S, d) (GQA pre-expanded or H==KV) → (B, H, S, d)."""
+    out, _ = flash_attention_fwd_lse(q, k, v, causal=causal, window=window,
+                                     block_q=block_q, block_k=block_k,
+                                     interpret=interpret)
+    return out

@@ -1,0 +1,163 @@
+"""Pallas TPU flash attention backward (FlashAttention-2 style).
+
+Two kernels, both recomputing the logit tile from (q, k) + the forward's
+per-row logsumexp — no O(S²) residuals:
+
+  dkv kernel  grid (B, H, S_k/bk, S_q/bq):  per KV block, accumulate
+              dK = Σᵢ dSᵀ Qᵢ and dV = Σᵢ Pᵀ dOᵢ in VMEM scratch over the
+              (minor-most) query-block loop
+  dq kernel   grid (B, H, S_q/bq, S_k/bk):  per Q block, accumulate
+              dQ = Σⱼ dS Kⱼ over the KV-block loop
+
+with  P = exp(S − lse),  dS = P ⊙ (dP − D) · scale,  dP = dO Vᵀ,
+      D = rowsum(dO ⊙ O)  (precomputed in jnp — O(S·d)).
+
+Together with the forward in flash_attention.py this completes the fused
+attention path: forward + backward never round-trip an (S, S) tensor
+through HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, causal, window):
+    m = jnp.ones(qpos.shape, jnp.bool_)
+    if causal:
+        m = m & (kpos <= qpos)
+    if window is not None:
+        m = m & (kpos > qpos - window)
+    return m
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr, *,
+                scale, block_q, block_k, causal, window):
+    ji = pl.program_id(2)          # kv block
+    ii = pl.program_id(3)          # q block (minor: sequential)
+    nq = pl.num_programs(3)
+
+    @pl.when(ii == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)          # (bq, d)
+    lse = lse_ref[0, 0].astype(jnp.float32)        # (bq, 1)
+    dsum = dsum_ref[0, 0].astype(jnp.float32)      # (bq, 1)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (bq,bk)
+    qpos = ii * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = ji * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(_mask(qpos, kpos, causal, window), s, NEG_INF)
+    p = jnp.exp(s - lse)                                             # (bq,bk)
+    dv_scr[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())))
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))        # (bq,bk)
+    ds = p * (dp - dsum) * scale
+    dk_scr[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())))
+
+    @pl.when(ii == nq - 1)
+    def _emit():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, dsum_ref,
+               dq_ref, dq_scr, *, scale, block_q, block_k, causal, window):
+    ii = pl.program_id(2)          # q block
+    ji = pl.program_id(3)          # kv block (minor)
+    nk = pl.num_programs(3)
+
+    @pl.when(ji == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0].astype(jnp.float32)
+    dsum = dsum_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    qpos = ii * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = ji * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(_mask(qpos, kpos, causal, window), s, NEG_INF)
+    p = jnp.exp(s - lse)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())))
+    ds = p * (dp - dsum) * scale
+    dq_scr[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())))
+
+    @pl.when(ji == nk - 1)
+    def _emit():
+        dq_ref[0, 0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, out, lse, do, *, causal=True, window=None,
+                        block_q=128, block_k=128, interpret=False):
+    """q/k/v/out/do: (B, H, S, d); lse: (B, H, S).  Returns (dq, dk, dv)."""
+    B, H, S, d = q.shape
+    Sk = k.shape[2]
+    block_q = min(block_q, S)
+    block_k = min(block_k, Sk)
+    assert S % block_q == 0 and Sk % block_k == 0
+    scale = 1.0 / np.sqrt(d)
+    dsum = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
+                   axis=-1)                                       # (B,H,S)
+    lse4 = lse[..., None]
+    dsum4 = dsum[..., None]
+
+    common = dict(scale=scale, block_q=block_q, block_k=block_k,
+                  causal=causal, window=window)
+    dkv = pl.pallas_call(
+        functools.partial(_dkv_kernel, **common),
+        grid=(B, H, Sk // block_k, S // block_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, j, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, j, i: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, j, i: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, j, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q, 1), lambda b, h, j, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q, 1), lambda b, h, j, i: (b, h, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, j, i: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, j, i: (b, h, j, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct(k.shape, k.dtype),
+                   jax.ShapeDtypeStruct(v.shape, v.dtype)],
+        scratch_shapes=[pltpu.VMEM((block_k, d), jnp.float32),
+                        pltpu.VMEM((block_k, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse4, dsum4)
+    dk, dv = dkv
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, **common),
+        grid=(B, H, S // block_q, Sk // block_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q, 1), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q, 1), lambda b, h, i, j: (b, h, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse4, dsum4)
+    return dq, dk, dv

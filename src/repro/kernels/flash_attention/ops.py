@@ -1,0 +1,88 @@
+"""Public flash-attention op: Pallas forward + exact recompute backward.
+
+``jax.custom_vjp``: the forward runs the Pallas kernel; the backward
+recomputes attention with the jnp reference and differentiates it — exact
+gradients with kernel-grade forward memory behavior (the standard
+recompute-in-backward pattern; a fused Pallas backward is a further
+optimization, not a correctness requirement).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, window=None, block_q=128,
+                    block_k=128, interpret=False):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, block_q, block_k, interpret):
+    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+def gqa_flash_attention(q, k, v, **kw):
+    """q: (B, S, H, d); k/v: (B, S, KV, d) — model-layout convenience
+    wrapper (transposes + GQA expansion)."""
+    H, KV = q.shape[2], k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    out = flash_attention(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                          v.swapaxes(1, 2), **kw)
+    return out.swapaxes(1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Fully-fused variant: Pallas forward AND Pallas backward (flash_bwd.py).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_fused(q, k, v, causal=True, window=None, block_q=128,
+                          block_k=128, interpret=False):
+    from repro.kernels.flash_attention.flash_attention import flash_attention_fwd_lse
+    out, _ = flash_attention_fwd_lse(q, k, v, causal=causal, window=window,
+                                     block_q=block_q, block_k=block_k,
+                                     interpret=interpret)
+    return out
+
+
+def _fused_fwd(q, k, v, causal, window, block_q, block_k, interpret):
+    from repro.kernels.flash_attention.flash_attention import flash_attention_fwd_lse
+    out, lse = flash_attention_fwd_lse(q, k, v, causal=causal, window=window,
+                                       block_q=block_q, block_k=block_k,
+                                       interpret=interpret)
+    return out, (q, k, v, out, lse[..., 0])
+
+
+def _fused_bwd(causal, window, block_q, block_k, interpret, res, g):
+    from repro.kernels.flash_attention.flash_bwd import flash_attention_bwd
+    q, k, v, out, lse = res
+    return flash_attention_bwd(q, k, v, out, lse, g, causal=causal,
+                               window=window, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+flash_attention_fused.defvjp(_fused_fwd, _fused_bwd)

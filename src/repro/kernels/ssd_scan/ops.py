@@ -1,0 +1,21 @@
+"""Public SSD op: group→head expansion + Pallas call, jit'd."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bg, Cg, *, chunk: int = 128, interpret: bool = False):
+    """Model-facing layout: Bg/Cg are (B, L, G, N) group projections; they
+    are broadcast to heads here.  Returns (y (B,L,H,P), state (B,H,P,N))."""
+    H = x.shape[2]
+    G = Bg.shape[2]
+    Bm = jnp.repeat(Bg, H // G, axis=2)
+    Cm = jnp.repeat(Cg, H // G, axis=2)
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

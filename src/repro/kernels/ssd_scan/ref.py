@@ -1,0 +1,33 @@
+"""Pure-jnp oracle: the naive per-step SSM recurrence (independent of the
+chunked formulation, so it cross-checks the SSD math itself):
+
+  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_tᵀ        y_t = C_t · h_t
+"""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """x: (B,L,H,P); dt: (B,L,H); A: (H,); Bm/Cm: (B,L,H,N).
+    Returns (y (B,L,H,P), final_state (B,H,P,N)) in float32."""
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                       # (B,H,P) (B,H) (B,H,N) (B,H,N)
+        decay = jnp.exp(dtt * A)[..., None, None]   # (B,H,1,1)
+        upd = dtt[..., None, None] * jnp.einsum("bhp,bhn->bhpn", xt, bt)
+        h = h * decay + upd
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), hT

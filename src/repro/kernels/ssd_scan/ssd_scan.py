@@ -1,0 +1,105 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan [arXiv:2405.21060].
+
+State-space duality splits the selective-scan recurrence into
+
+  intra-chunk:  Y₁ = (C Bᵀ ⊙ decay-mask) X         — quadratic in the chunk,
+                                                      three MXU matmuls
+  inter-chunk:  hₜ recurrence at chunk granularity  — carried in VMEM scratch
+
+Grid: (B, H, L/chunk) with the chunk index minor-most, so the TPU iterates
+chunks sequentially per (batch, head) and the (P, N) state lives in VMEM
+scratch across that loop — the recurrence never round-trips HBM.  This is
+the TPU adaptation of the paper's GPU algorithm: chunk=128/256 and N=128
+make every contraction (chunk×N · N×chunk, chunk×chunk · chunk×P,
+chunk×N ⊗ chunk×P) systolic-array-shaped, instead of relying on warp
+shuffles for the within-chunk scan.
+
+Inputs are pre-expanded to per-head layout:
+  x (B,L,H,P)  dt (B,L,H)  A (H,1)  Bm/Cm (B,L,H,N)
+Outputs: y (B,L,H,P), final state (B,H,P,N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
+                s_scr, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)               # (c, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)                # (c,)
+    A = a_ref[0, 0].astype(jnp.float32)                     # scalar
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)              # (c, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)              # (c, N)
+
+    dA = dt * A                                             # (c,) ≤ 0
+    seg = jnp.cumsum(dA)                                    # (c,)
+    # intra-chunk: M[q, k] = C_q·B_k · exp(seg_q − seg_k) · dt_k  (k ≤ q)
+    li = seg[:, None] - seg[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(kj <= qi, jnp.exp(li), 0.0)
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # (c, c)
+    M = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())))     # (c, P)
+    # inter-chunk: contribution of the entering state
+    state = s_scr[...]                                      # (P, N)
+    y += jnp.exp(seg)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())))                # (c, P)
+    # state update: s' = exp(Σ dA) s + Σ_k exp(seg_end − seg_k) dt_k x_k B_kᵀ
+    w = jnp.exp(seg[-1] - seg) * dt                         # (c,)
+    s_new = (jnp.exp(seg[-1]) * state
+             + jax.lax.dot_general(x * w[:, None], Bm,
+                                   (((0,), (0,)), ((), ()))))  # (P, N)
+    s_scr[...] = s_new
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        state_ref[0, 0] = s_new.astype(state_ref.dtype)
+
+
+def ssd_scan_pallas(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array, *, chunk: int = 128,
+                    interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """x: (B,L,H,P); dt: (B,L,H); A: (H,); Bm/Cm: (B,L,H,N) (head-expanded).
+    Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    A2 = A.reshape(H, 1)
+    grid = (B, H, nc)
+    y, state = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A2, Bm, Cm)
+    return y, state

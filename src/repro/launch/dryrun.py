@@ -1,0 +1,287 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture × input-shape) combination against the
+production meshes — 16×16 single-pod and 2×16×16 two-pod — and records
+memory analysis, HLO FLOPs/bytes, and the per-device collective schedule
+(parsed from the post-SPMD HLO) for the roofline analysis.
+
+The two lines above MUST stay the first statements in this module: jax locks
+the device count at first initialization, and only the dry-run wants 512
+placeholder host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+  ... [--combine sparse] [--out results/dryrun]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps as S
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _group_size(ls: str, n_dev: int) -> int:
+    m = _GROUPS_IOTA_RE.search(ls)
+    if m:  # [n_groups, group_size]<=[...]
+        return max(1, int(m.group(2)))
+    m = _GROUPS_LIST_RE.search(ls)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return n_dev
+
+
+def parse_collectives(hlo: str, n_dev: int) -> dict:
+    """Per-device wire bytes for every collective in post-SPMD HLO.
+
+    Result shapes in the HLO are per-device shards.  Wire-byte model per op
+    (ring algorithms, group size K):
+      all-gather          result · (K−1)/K
+      reduce-scatter      result · (K−1)          (operand = result·K)
+      all-reduce          result · 2(K−1)/K       (RS + AG)
+      all-to-all          result · (K−1)/K
+      collective-permute  result                  (point-to-point)
+    """
+    per_op: dict[str, dict] = {}
+    biggest: list[tuple[int, str]] = []
+    for line in hlo.splitlines():
+        ls = line.strip()
+        m_op = re.search(r"= [^ ]+ ([a-z\-]+)(?:-start)?\(", ls)
+        if not m_op:
+            continue
+        op = m_op.group(1).removesuffix("-start")
+        if op not in COLLECTIVE_OPS or "-done(" in ls:
+            continue
+        head = ls.split("=", 1)[1]
+        head = head[: head.index("(")]
+        result_bytes = sum(_shape_bytes(m) for m in _SHAPE_RE.finditer(head))
+        K = _group_size(ls, n_dev)
+        if op == "all-gather":
+            wire = result_bytes * (K - 1) // K
+        elif op == "reduce-scatter":
+            wire = result_bytes * (K - 1)
+        elif op == "all-reduce":
+            wire = result_bytes * 2 * (K - 1) // K
+        elif op == "all-to-all":
+            wire = result_bytes * (K - 1) // K
+        else:  # collective-permute
+            wire = result_bytes
+        d = per_op.setdefault(op, {"count": 0, "bytes": 0, "wire_bytes": 0})
+        d["count"] += 1
+        d["bytes"] += result_bytes
+        d["wire_bytes"] += wire
+        biggest.append((wire, ls[:200]))
+    biggest.sort(key=lambda t: -t[0])
+    return {"per_op": per_op,
+            "total_bytes": sum(d["wire_bytes"] for d in per_op.values()),
+            "total_count": sum(d["count"] for d in per_op.values()),
+            "top": [{"bytes": b, "op": s} for b, s in biggest[:8]]}
+
+
+def _mem_dict(mem) -> dict:
+    fields = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes")
+    return {f: getattr(mem, f) for f in fields}
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            combine: str | None = None, save_hlo: str | None = None,
+            overrides: dict | None = None) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            bundle = S.build_train(cfg, mesh, shape_name,
+                                   combine_override=combine)
+            # out_shardings pins the NEW state to the same layout as the
+            # input state — without it XLA may emit a step whose output
+            # sharding differs (hiding the combine's data movement from
+            # this step and pushing it into the next one)
+            jitted = jax.jit(bundle.step_fn,
+                             in_shardings=(bundle.state_shardings,
+                                           bundle.batch_shardings),
+                             out_shardings=(bundle.state_shardings, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(bundle.state_specs,
+                                   S.input_specs(cfg, shape_name))
+            extra = {"num_agents": bundle.K, "tasks_per_agent": bundle.T,
+                     "task_batch": bundle.tb}
+        elif shape.kind == "prefill":
+            bundle = S.build_prefill(cfg, mesh, shape_name)
+            jitted = jax.jit(bundle.step_fn,
+                             in_shardings=(bundle.params_shardings,
+                                           bundle.batch_shardings))
+            lowered = jitted.lower(bundle.params_specs,
+                                   S.input_specs(cfg, shape_name))
+            extra = {}
+        else:  # decode
+            bundle = S.build_serve(cfg, mesh, shape_name)
+            ins = S.input_specs(cfg, shape_name)
+            jitted = jax.jit(
+                bundle.step_fn,
+                in_shardings=(bundle.params_shardings,
+                              bundle.input_shardings["cache"],
+                              bundle.input_shardings["token"],
+                              bundle.input_shardings["pos"]),
+                donate_argnums=(1,))
+            lowered = jitted.lower(bundle.params_specs, ins["cache"],
+                                   ins["token"], ins["pos"])
+            extra = {}
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    n_dev_mesh = int(np.prod(mesh.devices.shape))
+    # cost_analysis() counts while-loop bodies once (ignores trip counts) —
+    # fatal for layer-scanned models, including their in-scan collectives.
+    # hlo_cost re-derives flops/bytes/collectives with known_trip_count
+    # applied (see launch/hlo_cost.py).
+    from repro.launch.hlo_cost import corrected_costs
+    corr = corrected_costs(hlo, n_dev=n_dev_mesh)
+    coll = corr["collectives"]
+    coll["top_level_only"] = parse_collectives(hlo, n_dev_mesh)["per_op"]
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    n_dev = int(np.prod(mesh.devices.shape))
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "kind": shape.kind,
+        "combine": combine or cfg.combine,
+        "flops_per_device": corr["flops"],
+        "bytes_per_device": corr["bytes"],
+        "flops_raw_cost_analysis": cost.get("flops", 0.0),
+        "bytes_raw_cost_analysis": cost.get("bytes accessed", 0.0),
+        "collectives": coll,
+        "memory": _mem_dict(mem),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        **extra,
+    }
+    print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}"
+          f" ok: {rec['flops_per_device']:.3e} flops/dev,"
+          f" {rec['bytes_per_device']:.3e} B/dev,"
+          f" coll {coll['total_bytes']:.3e} B/dev ({coll['total_count']} ops),"
+          f" temp {mem.temp_size_in_bytes/2**30:.2f} GiB/dev,"
+          f" args {mem.argument_size_in_bytes/2**30:.2f} GiB/dev,"
+          f" compile {rec['compile_s']:.0f}s")
+    print("  memory_analysis:", _mem_dict(mem))
+    print("  cost_analysis: flops=%.4g bytes=%.4g" %
+          (rec["flops_per_device"], rec["bytes_per_device"]))
+    return rec
+
+
+def shapes_for(arch: str) -> list[str]:
+    """long_500k only for sub-quadratic archs (DESIGN.md §long_500k skips);
+    decode skipped for encoder-only archs (none assigned)."""
+    cfg = get_config(arch)
+    sub_quadratic = (cfg.arch_type in ("ssm", "hybrid")
+                     or cfg.sliding_window is not None)
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if sub_quadratic:
+        out.append("long_500k")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--combine", default=None,
+                    help="override combine strategy (dense|sparse|centralized|none)")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--hvp-subsample", type=float, default=None)
+    ap.add_argument("--attn-q-chunk", type=int, default=None)
+    ap.add_argument("--inner-freeze", default=None)
+    ap.add_argument("--attn-shard", default=None)
+    ap.add_argument("--inner-steps", type=int, default=None)
+    ap.add_argument("--tag", default=None, help="suffix for output json")
+    args = ap.parse_args()
+    overrides = {}
+    if args.hvp_subsample is not None:
+        overrides["hvp_subsample"] = args.hvp_subsample
+    if args.attn_q_chunk is not None:
+        overrides["attn_q_chunk"] = args.attn_q_chunk
+    if args.inner_freeze is not None:
+        overrides["inner_freeze"] = args.inner_freeze
+    if args.attn_shard is not None:
+        overrides["attn_shard"] = args.attn_shard
+    if args.inner_steps is not None:
+        overrides["inner_steps"] = args.inner_steps
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = []
+    for arch in archs:
+        shapes = shapes_for(arch) if args.shape == "all" else [args.shape]
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch.replace('-', '_').replace('.', '_')}__{shape}__{'multi' if mp else 'single'}"
+                if args.combine:
+                    tag += f"__{args.combine}"
+                if args.tag:
+                    tag += f"__{args.tag}"
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    rec = run_one(arch, shape, mp, combine=args.combine,
+                                  save_hlo=args.save_hlo, overrides=overrides)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                except Exception as e:  # record and continue
+                    failures.append((tag, repr(e)))
+                    print(f"[dryrun] FAIL {tag}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

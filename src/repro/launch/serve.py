@@ -1,0 +1,106 @@
+"""Batched serving driver: adapt-then-serve.
+
+Dif-MAML's product is a *launch model*: at serving time an agent adapts it
+to the live task with a few gradient steps (here: on a small support set),
+then serves batched decode requests from the adapted model.  This driver
+demonstrates the full path on CPU with a reduced config; the same
+``build_serve`` bundle lowers for the production mesh in the dry-run.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \\
+      --batch 4 --prompt-len 8 --gen 16 --adapt-steps 2
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.data.lm_tasks import LMTaskSampler
+from repro.launch.mesh import make_host_mesh
+from repro.launch import steps as S
+from repro.models.transformer import build_model
+
+
+def adapt(model, params, support, lr: float, steps: int):
+    """Task adaptation of the launch model (inner loop at serving time)."""
+    for _ in range(steps):
+        g = jax.grad(model.loss_fn)(params, support)
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+    return params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--adapt-steps", type=int, default=2)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    dt = S.DTYPES[cfg.dtype] if not args.reduced else jnp.float32
+
+    with mesh:
+        params = model.init(jax.random.key(0), dt)
+        sampler = LMTaskSampler(cfg.padded_vocab, args.prompt_len + args.gen)
+        support = sampler.sample_task(0, args.batch, seed=1)
+        support = {k: jnp.asarray(v) for k, v in support.items()}
+        if cfg.arch_type == "audio":
+            support["encoder_frames"] = jnp.zeros(
+                (args.batch, cfg.encoder_frames, cfg.d_model), dt)
+        if cfg.arch_type == "vlm":
+            support["image_patches"] = jnp.zeros(
+                (args.batch, cfg.num_patches, cfg.d_model), dt)
+        t0 = time.time()
+        params = adapt(model, params, support, cfg.inner_lr, args.adapt_steps)
+        print(f"[serve] adapted launch model in {time.time()-t0:.2f}s "
+              f"({args.adapt_steps} steps)")
+
+        B = args.batch
+        total = args.prompt_len + args.gen
+        enc = None
+        if cfg.arch_type == "audio":
+            enc = model.encode(params, support["encoder_frames"])
+        elif cfg.arch_type == "vlm":
+            enc = support["image_patches"] @ params["vision_proj"]
+        cache = model.init_cache(B, total, dt, params=params, enc=enc)
+        step = jax.jit(model.decode_step)
+
+        prompt = np.asarray(support["tokens"])[:, : args.prompt_len]
+        out_tokens = [prompt[:, i] for i in range(args.prompt_len)]
+        tok = jnp.asarray(prompt[:, :1])
+        t0 = time.time()
+        for t in range(total - 1):
+            logits, cache = step(params, cache, tok,
+                                 jnp.full((B,), t, jnp.int32))
+            if t + 1 < args.prompt_len:           # teacher-force the prompt
+                tok = jnp.asarray(prompt[:, t + 1: t + 2])
+            else:
+                if args.temperature > 0:
+                    key = jax.random.fold_in(jax.random.key(7), t)
+                    nxt = jax.random.categorical(
+                        key, logits[:, 0] / args.temperature, axis=-1)
+                else:
+                    nxt = jnp.argmax(logits[:, 0], axis=-1)
+                tok = nxt[:, None].astype(jnp.int32)
+                out_tokens.append(np.asarray(tok)[:, 0])
+        dt_s = time.time() - t0
+        gen = np.stack(out_tokens, axis=1)
+        print(f"[serve] {B} seqs × {total} steps in {dt_s:.2f}s "
+              f"({B * args.gen / dt_s:.1f} tok/s)")
+        print("[serve] sample:", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,327 @@
+"""Builders: per-(architecture × input-shape × mesh) train/serve steps with
+full sharding trees and ShapeDtypeStruct input specs — shared by the
+dry-run, the trainer, and the server.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES
+from repro.core import MetaConfig, diffusion, maml, topology
+from repro.core.meta_trainer import TrainState, make_meta_step
+from repro.models.init import Spec, abstract, axes_tree, with_agent_axis
+from repro.models.transformer import build_model
+from repro.optim import get_optimizer
+from repro.sharding.rules import rules_for, spec_for, tree_shardings
+
+PyTree = Any
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+# ---------------------------------------------------------------------------
+# Agent / batch geometry
+# ---------------------------------------------------------------------------
+
+def agent_count(cfg: ArchConfig, mesh: Mesh) -> int:
+    from repro.sharding.rules import _axis_sizes
+    sizes = _axis_sizes(mesh)
+    if cfg.placement == "pod":
+        return sizes.get("pod", 1)
+    return sizes.get("data", 1) * sizes.get("pod", 1)
+
+
+def batch_geometry(cfg: ArchConfig, shape: InputShape, K: int
+                   ) -> tuple[int, int]:
+    """(tasks_per_agent, task_batch): B = K · T · tb · 2 (support+query)."""
+    per_agent = shape.global_batch // K
+    assert per_agent >= 2, (shape.global_batch, K)
+    half = per_agent // 2
+    T = cfg.meta_tasks
+    while half % T:
+        T -= 1
+    return T, half // T
+
+
+def split_meta_batch(cfg: ArchConfig, batch: dict, K: int, T: int, tb: int,
+                     fold_spec: P | None = None, mesh: Mesh | None = None
+                     ) -> tuple[dict, dict]:
+    """(B, ...) arrays → support/query dicts with leading (K, T, tb, ...).
+
+    ``fold_spec`` re-asserts the sharding of the folded layout — XLA's
+    sharding propagation cannot split a dim-0 sharding across the
+    non-adjacent (agent, task-batch) factors of the reshape, and silently
+    replicates the batch without this constraint (measured: ~16× per-device
+    FLOPs on pod-placement archs)."""
+
+    def leaf(x):
+        rest = x.shape[1:]
+        out = x.reshape((K, T, 2 * tb) + rest)
+        if fold_spec is not None and mesh is not None:
+            spec = P(*(tuple(fold_spec) + (None,) * len(rest)))
+            out = jax.lax.with_sharding_constraint(
+                out, NamedSharding(mesh, spec))
+        return out
+
+    folded = {k: leaf(v) for k, v in batch.items()}
+    support = {k: v[:, :, :tb] for k, v in folded.items()}
+    query = {k: v[:, :, tb:] for k, v in folded.items()}
+    return support, query
+
+
+# ---------------------------------------------------------------------------
+# Input specs (deliverable f): ShapeDtypeStructs for every model input
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one (arch × input-shape).
+
+    train/prefill: {tokens, labels [, encoder_frames | image_patches]}
+    decode:        {token, pos, cache}
+    """
+    shape = INPUT_SHAPES[shape_name]
+    dt = DTYPES[cfg.dtype]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs: dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        if cfg.arch_type == "audio":
+            specs["encoder_frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_frames, cfg.d_model), dt)
+        if cfg.arch_type == "vlm":
+            specs["image_patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), dt)
+        return specs
+    # decode: one new token against a seq_len cache
+    model = build_model(cfg)
+    cache = abstract(model.cache_specs(B, S), dt)
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "cache": cache,
+    }
+
+
+def input_axes(cfg: ArchConfig, shape_name: str) -> dict[str, Any]:
+    """Logical axes matching input_specs (for sharding assignment)."""
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind in ("train", "prefill"):
+        axes: dict[str, Any] = {
+            "tokens": ("batch", None),
+            "labels": ("batch", None),
+        }
+        if cfg.arch_type == "audio":
+            axes["encoder_frames"] = ("batch", None, "embed")
+        if cfg.arch_type == "vlm":
+            axes["image_patches"] = ("batch", None, "embed")
+        return axes
+    model = build_model(cfg)
+    cache_axes = axes_tree(model.cache_specs(shape.global_batch, shape.seq_len))
+    return {"token": ("batch", None), "pos": ("batch",), "cache": cache_axes}
+
+
+# ---------------------------------------------------------------------------
+# Train step (Dif-MAML meta-iteration)
+# ---------------------------------------------------------------------------
+
+def meta_config_for(cfg: ArchConfig, K: int, T: int) -> MetaConfig:
+    return MetaConfig(
+        num_agents=K,
+        tasks_per_agent=T,
+        inner_lr=cfg.inner_lr,
+        inner_steps=cfg.inner_steps,
+        mode=cfg.meta_mode,
+        combine=cfg.combine if K > 1 else "none",
+        topology=cfg.topology,
+        outer_optimizer=cfg.outer_optimizer,
+        outer_lr=cfg.outer_lr,
+        hvp_subsample=cfg.hvp_subsample,
+    )
+
+
+@dataclasses.dataclass
+class TrainBundle:
+    cfg: ArchConfig
+    mesh: Mesh
+    K: int
+    T: int
+    tb: int
+    step_fn: Any                  # (state, batch) -> (state, metrics)
+    state_specs: Any              # abstract TrainState
+    state_shardings: Any
+    batch_shardings: Any
+    init_state: Any               # () -> TrainState (materialized)
+
+
+def opt_state_axes(opt_name: str, params_axes: PyTree) -> PyTree:
+    from repro.optim.optimizers import AdamState, MomentumState
+    if opt_name in ("adam", "adamw"):
+        return AdamState((), params_axes, params_axes)
+    if opt_name == "momentum":
+        return MomentumState(params_axes)
+    return ()
+
+
+def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
+                combine_override: str | None = None) -> TrainBundle:
+    shape = INPUT_SHAPES[shape_name]
+    assert shape.kind in ("train", "prefill")
+    dt = DTYPES[cfg.dtype]
+    model = build_model(cfg)
+    if cfg.placement == "pod":
+        # keep per-task activations batch-sharded over the data axis (the
+        # agent/task dims are vmapped away above this constraint)
+        model.act_sharding = NamedSharding(mesh, P("data", None, None))
+    K = agent_count(cfg, mesh)
+    T, tb = batch_geometry(cfg, shape, K)
+    mcfg = meta_config_for(cfg, K, T)
+    if combine_override:
+        mcfg = dataclasses.replace(mcfg, combine=combine_override)
+    opt = get_optimizer(cfg.outer_optimizer, cfg.outer_lr)
+    A = (topology.combination_matrix(K, cfg.topology) if K > 1
+         else np.ones((1, 1)))
+
+    # ---- shardings (needed below for the sparse combine's in_specs) -------
+    rules = rules_for(cfg, mesh, kind="train")
+    p_specs = with_agent_axis(model.specs(), K)
+    p_axes = axes_tree(p_specs)
+    p_abs = abstract(p_specs, dt)
+    params_sh = tree_shardings(p_axes, p_abs, rules, mesh)
+
+    multi_pod = "pod" in mesh.axis_names
+    combine_fn = None
+    if mcfg.combine == "sparse" and K > 1:
+        # Sparse neighbor combine: weighted rolls over the agent axis.
+        # Under GSPMD a roll on the agent-sharded dim lowers to
+        # collective-permutes of one shard per circular offset, while every
+        # other (TP) dim keeps its sharding — unlike a partial-manual
+        # shard_map, whose in_specs may not mention auto axes and which
+        # therefore all-gathers TP shards at entry (measured +77% wire).
+        combine_fn = diffusion.make_combine("sparse_host", A=A)
+    freeze_mask = None
+    if cfg.inner_freeze:
+        # ANIL-style: the named subtree (e.g. 'encoder') is frozen in the
+        # inner loop — its inner gradient, update, and curvature cross-terms
+        # vanish; the outer step still trains it (EXPERIMENTS HC3).
+        freeze_mask = jax.tree_util.tree_map_with_path(
+            lambda path, _: any(getattr(k, "key", None) == cfg.inner_freeze
+                                for k in path),
+            abstract(model.specs(), dt))
+    step = make_meta_step(model.loss_fn, mcfg, optimizer=opt, A=A,
+                          combine_fn=combine_fn, freeze_mask=freeze_mask)
+    if cfg.placement == "pod":
+        fold_spec = P("pod" if multi_pod else None, None, "data")
+    else:
+        fold_spec = P(("pod", "data") if multi_pod else "data")
+
+    def train_step(state: TrainState, batch: dict):
+        support, query = split_meta_batch(cfg, batch, K, T, tb,
+                                          fold_spec=fold_spec, mesh=mesh)
+        return step(state, support, query)
+
+    opt_abs = jax.eval_shape(opt.init, p_abs)
+    o_axes = opt_state_axes(cfg.outer_optimizer, p_axes)
+    opt_sh = tree_shardings(o_axes, opt_abs, rules, mesh) if o_axes != () else ()
+    state_abs = TrainState(jax.ShapeDtypeStruct((), jnp.int32), p_abs, opt_abs)
+    state_sh = TrainState(NamedSharding(mesh, P()), params_sh, opt_sh)
+
+    in_axes_map = input_axes(cfg, shape_name)
+    in_specs = input_specs(cfg, shape_name)
+    batch_sh = tree_shardings(in_axes_map, in_specs, rules, mesh)
+
+    def init_state_fn(seed: int = 0) -> TrainState:
+        keys = jax.random.split(jax.random.key(seed), K)
+        params = jax.vmap(lambda k: model.init(k, dt))(keys)
+        return TrainState(jnp.zeros((), jnp.int32), params, opt.init(params))
+
+    return TrainBundle(cfg, mesh, K, T, tb, train_step, state_abs, state_sh,
+                       batch_sh, init_state_fn)
+
+
+# ---------------------------------------------------------------------------
+# Prefill step (inference-prefill: full-sequence forward)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PrefillBundle:
+    cfg: ArchConfig
+    mesh: Mesh
+    step_fn: Any                  # (params, batch) -> logits
+    params_specs: Any
+    params_shardings: Any
+    batch_shardings: Any
+
+
+def build_prefill(cfg: ArchConfig, mesh: Mesh, shape_name: str
+                  ) -> PrefillBundle:
+    """Inference prefill: one full-sequence forward of the launch model
+    (no agent axis, no meta step) producing next-token logits."""
+    dt = DTYPES[cfg.dtype]
+    # inference uses the GShard one-hot MoE dispatch where the dispatch/
+    # expert flop ratio allows (−75% FLOPs/dev, −91% wire on jamba/mixtral
+    # prefill; 'auto' keeps sort/gather for high-k small-f MoEs like
+    # DeepSeek where the one-hot einsum would exceed the expert GEMMs) —
+    # EXPERIMENTS HC2
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, moe_dispatch="auto")
+    model = build_model(cfg)
+    model.act_sharding = NamedSharding(mesh, P("data", None, None))
+
+    def prefill_step(params, batch):
+        return model.forward(params, batch)
+
+    rules = rules_for(cfg, mesh, kind="decode")
+    p_specs = model.specs()
+    p_abs = abstract(p_specs, dt)
+    params_sh = tree_shardings(axes_tree(p_specs), p_abs, rules, mesh)
+    in_specs = {k: v for k, v in input_specs(cfg, shape_name).items()}
+    axes = {"tokens": ("batch", None), "labels": ("batch", None)}
+    if cfg.arch_type == "audio":
+        axes["encoder_frames"] = ("batch", None, "embed")
+    if cfg.arch_type == "vlm":
+        axes["image_patches"] = ("batch", None, "embed")
+    batch_sh = tree_shardings(axes, in_specs, rules, mesh)
+    return PrefillBundle(cfg, mesh, prefill_step, p_abs, params_sh, batch_sh)
+
+
+# ---------------------------------------------------------------------------
+# Serve step (single-token decode against a KV cache)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeBundle:
+    cfg: ArchConfig
+    mesh: Mesh
+    step_fn: Any                  # (params, cache, token, pos) -> (logits, cache)
+    params_specs: Any
+    params_shardings: Any
+    input_shardings: Any          # dict for {token,pos,cache}
+
+
+def build_serve(cfg: ArchConfig, mesh: Mesh, shape_name: str) -> ServeBundle:
+    shape = INPUT_SHAPES[shape_name]
+    assert shape.kind == "decode"
+    dt = DTYPES[cfg.dtype]
+    model = build_model(cfg)
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    rules = rules_for(cfg, mesh, kind="decode")
+    p_specs = model.specs()
+    p_axes = axes_tree(p_specs)
+    p_abs = abstract(p_specs, dt)
+    params_sh = tree_shardings(p_axes, p_abs, rules, mesh)
+    in_specs = input_specs(cfg, shape_name)
+    in_axes_map = input_axes(cfg, shape_name)
+    input_sh = tree_shardings(in_axes_map, in_specs, rules, mesh)
+    return ServeBundle(cfg, mesh, serve_step, p_abs, params_sh, input_sh)

@@ -1,0 +1,4 @@
+from repro.models.init import Spec, materialize, axes_tree, count_params
+from repro.models import layers, transformer
+
+__all__ = ["Spec", "materialize", "axes_tree", "count_params", "layers", "transformer"]

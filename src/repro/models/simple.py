@@ -1,0 +1,97 @@
+"""The paper's own models: sine-regression MLP and few-shot conv net."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.init import Spec, materialize
+
+PyTree = Any
+
+
+class SineMLP:
+    """2 hidden layers × `width` ReLU units (paper App. D.1)."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.width = cfg.d_model
+        self.depth = cfg.num_layers
+
+    def specs(self) -> PyTree:
+        w = self.width
+        dims = [1] + [w] * self.depth + [1]
+        # Finn et al. 2017 use ~N(0, 0.01) weights; larger inits make the
+        # α=0.01 inner step unstable on the raw x ∈ [-5, 5] inputs.
+        return {f"l{i}": {"w": Spec((dims[i], dims[i + 1]), ("embed", "ffn"), "normal", 0.5),
+                          "b": Spec((dims[i + 1],), ("ffn",), "zeros")}
+                for i in range(len(dims) - 1)}
+
+    def init(self, key, dtype=jnp.float32):
+        return materialize(self.specs(), key, dtype)
+
+    def forward(self, params: PyTree, x: jax.Array) -> jax.Array:
+        n = self.depth + 1
+        for i in range(n):
+            x = x @ params[f"l{i}"]["w"] + params[f"l{i}"]["b"]
+            if i < n - 1:
+                x = jax.nn.relu(x)
+        return x
+
+    def loss_fn(self, params: PyTree, batch) -> jax.Array:
+        x, y = batch
+        return jnp.mean((self.forward(params, x) - y) ** 2)
+
+
+class FewShotCNN:
+    """Conv blocks (3×3, stride 1, 2×2 maxpool) + linear head; operates on
+    flattened (hw*hw,) synthetic images (data/fewshot.py)."""
+
+    def __init__(self, cfg: ArchConfig, image_hw: int = 14):
+        self.ch = cfg.d_model
+        self.blocks = cfg.num_layers
+        self.n_way = cfg.vocab_size
+        self.hw = image_hw
+
+    def specs(self) -> PyTree:
+        p = {}
+        cin, hw = 1, self.hw
+        for i in range(self.blocks):
+            p[f"conv{i}"] = {
+                "w": Spec((3, 3, cin, self.ch), (None, None, None, "ffn"), "fan_in", 0.5),
+                "b": Spec((self.ch,), ("ffn",), "zeros"),
+            }
+            cin, hw = self.ch, hw // 2
+        p["head"] = {"w": Spec((hw * hw * self.ch, self.n_way), ("embed", None), "fan_in", 0.3),
+                     "b": Spec((self.n_way,), (None,), "zeros")}
+        return p
+
+    def init(self, key, dtype=jnp.float32):
+        return materialize(self.specs(), key, dtype)
+
+    def forward(self, params: PyTree, x: jax.Array) -> jax.Array:
+        B = x.shape[0]
+        h = x.reshape(B, self.hw, self.hw, 1)
+        for i in range(self.blocks):
+            h = jax.lax.conv_general_dilated(
+                h, params[f"conv{i}"]["w"], (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            h = h + params[f"conv{i}"]["b"]
+            h = jax.nn.relu(h)
+            h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        h = h.reshape(B, -1)
+        return h @ params["head"]["w"] + params["head"]["b"]
+
+    def loss_fn(self, params: PyTree, batch) -> jax.Array:
+        x, y = batch
+        logits = self.forward(params, x)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    def accuracy(self, params: PyTree, batch) -> jax.Array:
+        x, y = batch
+        return jnp.mean((jnp.argmax(self.forward(params, x), -1) == y)
+                        .astype(jnp.float32))

@@ -1,0 +1,5 @@
+"""From-scratch JAX optimizers (the paper's outer loop uses Adam and SGD)."""
+from repro.optim.optimizers import Optimizer, sgd, momentum, adam, adamw, clip_by_global_norm, get_optimizer
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam", "adamw",
+           "clip_by_global_norm", "get_optimizer"]

@@ -1,0 +1,117 @@
+"""Minimal optimizer library (optax-style, written from scratch).
+
+``Optimizer`` is a pair of pure functions:
+
+    state   = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params  = tree_map(lambda p, u: p + u, params, updates)
+
+All states are pytrees of arrays shaped like the parameters, so the whole
+thing vmaps/pjits transparently — in particular, parameters with a leading
+agent axis get per-agent optimizer moments for free (the paper's agents each
+run a local Adam; only launch models are combined, moments stay local).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+# ---------------------------------------------------------------------------
+# SGD / momentum
+# ---------------------------------------------------------------------------
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+class MomentumState(NamedTuple):
+    velocity: PyTree
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return MomentumState(jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params):
+        v = jax.tree.map(lambda v, g: beta * v + g, state.velocity, grads)
+        return jax.tree.map(lambda v: -lr * v, v), MomentumState(v)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW
+# ---------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(zeros, params),
+                         jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def u(m, v, p):
+            upd = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                upd = upd - lr * weight_decay * p.astype(jnp.float32)
+            return upd.astype(p.dtype)
+
+        return jax.tree.map(u, mu, nu, params), AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    return adam(lr, b1, b2, eps, weight_decay)
+
+
+# ---------------------------------------------------------------------------
+# Gradient transformations
+# ---------------------------------------------------------------------------
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+
+
+def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    table = {"sgd": sgd, "momentum": momentum, "adam": adam, "adamw": adamw}
+    return table[name](lr, **kw)

@@ -1,0 +1,3 @@
+from repro.sharding.rules import Rules, rules_for, spec_for, tree_shardings
+
+__all__ = ["Rules", "rules_for", "spec_for", "tree_shardings"]

@@ -1,0 +1,152 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+Each parameter / cache / batch leaf carries a tuple of logical axis names
+(from models/init.py Specs).  ``spec_for`` greedily assigns mesh axes to
+dims in rule-priority order, skipping any assignment where the mesh axes do
+not evenly divide the dim or were already used by another dim of the same
+leaf.  This yields valid PartitionSpecs for *every* architecture (head
+counts like 12/20/28 that don't divide the 16-wide model axis simply fall
+through to the next candidate or stay replicated).
+
+A *candidate* is a tuple of mesh-axis names — the dim is sharded jointly
+over all of them (e.g. ``('pod', 'data')`` shards one dim 32-way).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+PyTree = Any
+Candidate = tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    table: tuple[tuple[str, tuple[Candidate, ...]], ...]
+    priority: tuple[str, ...]
+
+    def candidates(self, logical: str) -> tuple[Candidate, ...]:
+        for k, v in self.table:
+            if k == logical:
+                return v
+        return ()
+
+
+def rules_for(cfg: ArchConfig, mesh: Mesh, kind: str = "train") -> Rules:
+    """Rule set for an architecture on a mesh.  kind: 'train' | 'decode'."""
+    multi_pod = "pod" in mesh.axis_names
+    pod_placed = cfg.placement == "pod"
+
+    if kind == "train":
+        if pod_placed:
+            # agents = pods; 'data' axis does FSDP + batch within each agent
+            agent: tuple[Candidate, ...] = ((("pod",),) if multi_pod else ())
+            # the global batch dim of inputs: agent-major then data within
+            batch: tuple[Candidate, ...] = (
+                (("pod", "data"), ("data",)) if multi_pod else (("data",),))
+            fsdp: tuple[Candidate, ...] = (("data",),)
+            experts: tuple[Candidate, ...] = (("data",), ("model",))
+        else:
+            # agents tile the whole data-parallel extent; the input batch
+            # dim is agent-major and carries the same sharding
+            agent = ((("pod", "data"),) if multi_pod else (("data",),))
+            batch = agent
+            fsdp = ()
+            experts = (("model",),)
+        attn_heads: tuple[Candidate, ...] = (
+            (("model",),) if cfg.attn_shard == "heads" else ())
+        attn_hd: tuple[Candidate, ...] = (
+            (("model",),) if cfg.attn_shard == "head_dim" else ())
+        table = (
+            ("agent", agent),
+            ("batch", batch),
+            ("vocab", (("model",),)),
+            ("ffn", (("model",),)),
+            ("heads", attn_heads),
+            ("head_dim", attn_hd),
+            ("kv_lora", (("model",),)),
+            ("ssm_dim", (("model",),)),
+            ("experts", experts),
+            ("embed", fsdp),
+        )
+        priority = ("agent", "vocab", "ffn", "experts", "heads", "head_dim",
+                    "kv_lora", "ssm_dim", "batch", "embed")
+        return Rules(table, priority)
+
+    # ---- decode / serving ----------------------------------------------------
+    batch = (("pod", "data"), ("data",)) if multi_pod else (("data",),)
+    table = (
+        ("batch", batch),
+        # long-context KV caches (batch too small to shard) fall back to
+        # sharding the sequence dim of the cache over the data axis
+        ("seq", (("data",), ("pod",)) if multi_pod else (("data",),)),
+        ("vocab", (("model",),)),
+        ("ffn", (("model",),)),
+        ("heads", (("model",),) if cfg.attn_shard == "heads" else ()),
+        # decode always shards head_dim: the contraction's all-reduce is a
+        # (B,KV,1,C) sliver, and an unsharded KV cache would replicate
+        # model-axis-wide (measured 6.8 → 107 GiB/dev on whisper decode)
+        ("head_dim", (("model",),)),
+        ("kv_heads", ()),
+        ("kv_lora", (("model",),)),
+        ("ssm_dim", (("model",),)),
+        ("experts", (("model",),)),
+        ("embed", ()),
+    )
+    priority = ("batch", "vocab", "ffn", "experts", "heads", "kv_heads",
+                "head_dim", "kv_lora", "ssm_dim", "seq", "embed")
+    return Rules(table, priority)
+
+
+def _axis_sizes(mesh) -> dict[str, int]:
+    if hasattr(mesh, "axis_sizes"):          # works for AbstractMesh too
+        return dict(zip(mesh.axis_names, mesh.axis_sizes))
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for(axes: Sequence[str | None], shape: Sequence[int], rules: Rules,
+             mesh: Mesh) -> P:
+    """Greedy, divisibility-checked PartitionSpec for one leaf."""
+    mesh_sizes = _axis_sizes(mesh)
+    assignment: dict[int, Any] = {}
+    used: set[str] = set()
+
+    order = sorted(
+        range(len(axes)),
+        key=lambda i: (rules.priority.index(axes[i])
+                       if axes[i] in rules.priority else len(rules.priority)),
+    )
+    for i in order:
+        name = axes[i]
+        if name is None:
+            continue
+        for cand in rules.candidates(name):
+            if any(a in used or a not in mesh_sizes for a in cand):
+                continue
+            size = 1
+            for a in cand:
+                size *= mesh_sizes[a]
+            if shape[i] == 0 or shape[i] % size != 0:
+                continue
+            assignment[i] = cand if len(cand) > 1 else cand[0]
+            used.update(cand)
+            break
+    return P(*[assignment.get(i) for i in range(len(axes))])
+
+
+def tree_shardings(axes_tree: PyTree, shape_tree: PyTree, rules: Rules,
+                   mesh: Mesh) -> PyTree:
+    """NamedSharding tree matching an axes tree + shape/array tree."""
+
+    def leaf(ax, shaped):
+        shape = shaped.shape if hasattr(shaped, "shape") else tuple(shaped)
+        return NamedSharding(mesh, spec_for(ax, shape, rules, mesh))
+
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+    return jax.tree.map(leaf, axes_tree, shape_tree, is_leaf=is_axes)

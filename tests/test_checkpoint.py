@@ -1,0 +1,46 @@
+"""Checkpoint roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.core import MetaConfig, init_state
+from repro.optim import adam
+
+
+def _state():
+    init_fn = lambda k: {"w": jax.random.normal(k, (3, 4)),
+                         "nested": {"b": jnp.zeros(2)}}
+    mcfg = MetaConfig(num_agents=3, outer_optimizer="adam")
+    return init_state(jax.random.key(0), init_fn, mcfg)
+
+
+def test_roundtrip(tmp_path):
+    state = _state()
+    save_checkpoint(str(tmp_path), 7, state)
+    assert latest_step(str(tmp_path)) == 7
+    restored = restore_checkpoint(str(tmp_path), state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_picks_max(tmp_path):
+    state = _state()
+    for s in (1, 10, 5):
+        save_checkpoint(str(tmp_path), s, state)
+    assert latest_step(str(tmp_path)) == 10
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path / "none"), _state())
+
+
+def test_shape_mismatch_raises(tmp_path):
+    state = _state()
+    save_checkpoint(str(tmp_path), 0, state)
+    bad = jax.tree.map(
+        lambda x: jnp.zeros((5,) + x.shape[1:]) if x.ndim else x, state)
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), bad)

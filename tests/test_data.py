@@ -1,0 +1,80 @@
+"""Task-distribution substrates."""
+import numpy as np
+import pytest
+
+from repro.data.sine import (SineTaskDistribution, agent_sine_distributions,
+                             stacked_agent_batch, AMP_LO, AMP_HI)
+from repro.data.fewshot import FewShotSampler
+from repro.data.lm_tasks import LMTaskSampler
+
+
+def test_sine_shapes_and_ranges():
+    d = SineTaskDistribution(seed=1)
+    (sx, sy), (qx, qy) = d.sample_batch(7, 10)
+    assert sx.shape == (7, 10, 1) and qy.shape == (7, 10, 1)
+    assert np.all(np.abs(sy) <= AMP_HI)
+    # support and query are disjoint draws (the paper's X_in / X_o)
+    assert not np.allclose(sx, qx)
+
+
+def test_agent_amplitude_partition():
+    """Paper §4.1: [0.1, 5.0] evenly split across K agents."""
+    K = 6
+    dists = agent_sine_distributions(K)
+    edges = np.linspace(AMP_LO, AMP_HI, K + 1)
+    for k, d in enumerate(dists):
+        assert d.amp_lo == pytest.approx(edges[k])
+        assert d.amp_hi == pytest.approx(edges[k + 1])
+    (sx, sy), _ = dists[0].sample_batch(100, 5)
+    assert np.max(np.abs(sy)) <= edges[1] + 1e-6
+
+
+def test_stacked_agent_batch_layout():
+    dists = agent_sine_distributions(4)
+    (sx, sy), (qx, qy) = stacked_agent_batch(dists, 3, 10)
+    assert sx.shape == (4, 3, 10, 1)
+    assert qy.shape == (4, 3, 10, 1)
+
+
+def test_fewshot_episode_structure():
+    s = FewShotSampler(n_classes=50, n_way=5, k_shot=1, n_query=4, seed=0)
+    (sx, sy), (qx, qy) = s.sample(6)
+    assert sx.shape == (6, 5, s.dim) and sy.shape == (6, 5)
+    assert qx.shape == (6, 20, s.dim)
+    for t in range(6):
+        assert set(sy[t].tolist()) == set(range(5))
+
+
+def test_fewshot_meta_split_disjoint():
+    s = FewShotSampler(n_classes=50, train_fraction=0.8)
+    assert len(set(s._train_classes) & set(s._test_classes)) == 0
+
+
+def test_fewshot_agents_layout():
+    s = FewShotSampler(n_classes=60)
+    (sx, sy), (qx, qy) = s.sample_agents(K=3, tasks_per_agent=2)
+    assert sx.shape[:2] == (3, 2)
+
+
+def test_lm_tasks_deterministic_per_domain():
+    s = LMTaskSampler(vocab_size=1024, seq_len=32, seed=7)
+    a = s.sample_task(3, batch=4, seed=11)
+    b = s.sample_task(3, batch=4, seed=11)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+def test_lm_tasks_domains_differ():
+    s = LMTaskSampler(vocab_size=1024, seq_len=64)
+    a = s.sample_task(0, 2, seed=5)["tokens"]
+    b = s.sample_task(1, 2, seed=5)["tokens"]
+    assert not np.array_equal(a, b)
+
+
+def test_lm_tasks_agent_stacking():
+    s = LMTaskSampler(vocab_size=512, seq_len=16, n_domains=8)
+    sup, qry = s.sample_agents(K=4, tasks_per_agent=2, task_batch=3)
+    assert sup["tokens"].shape == (4, 2, 3, 16)
+    assert qry["labels"].shape == (4, 2, 3, 16)
+    assert sup["tokens"].max() < 512

@@ -1,0 +1,191 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.kernels.dif_combine.dif_combine import dif_combine
+from repro.kernels.dif_combine.ops import combine_tree
+from repro.kernels.dif_combine.ref import dif_combine_ref
+from repro.kernels.flash_attention.ops import flash_attention, gqa_flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# dif_combine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K", [2, 6, 8, 16])
+@pytest.mark.parametrize("M,bm", [(512, 128), (2048, 512), (1024, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dif_combine_sweep(K, M, bm, dtype):
+    A = jnp.asarray(topology.combination_matrix(K, "ring"), dtype)
+    phi = jax.random.normal(jax.random.key(K * M), (K, M), jnp.float32).astype(dtype)
+    out = dif_combine(A, phi, block_m=bm, interpret=True)
+    ref = dif_combine_ref(A, phi)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_dif_combine_tree_pads_ragged_leaves():
+    K = 4
+    A = jnp.asarray(topology.combination_matrix(K, "full"), jnp.float32)
+    phi = {"a": jax.random.normal(jax.random.key(0), (K, 3, 37)),
+           "b": jax.random.normal(jax.random.key(1), (K, 130))}
+    out = combine_tree(A, phi, block_m=128, interpret=True)
+    for name in phi:
+        flat = phi[name].reshape(K, -1)
+        ref = dif_combine_ref(A, flat).reshape(phi[name].shape)
+        np.testing.assert_allclose(out[name], ref, atol=1e-5)
+
+
+def test_dif_combine_doubly_stochastic_preserves_mean():
+    K, M = 8, 512
+    A = jnp.asarray(topology.combination_matrix(K, "erdos"), jnp.float32)
+    phi = jax.random.normal(jax.random.key(3), (K, M))
+    out = dif_combine(A, phi, block_m=128, interpret=True)
+    np.testing.assert_allclose(out.mean(0), phi.mean(0), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,bq,bk", [(128, 128, 128), (256, 64, 128),
+                                     (512, 128, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(S, bq, bk, causal, dtype):
+    B, H, d = 2, 3, 64
+    q, k, v = [jax.random.normal(jax.random.key(i), (B, H, S, d),
+                                 jnp.float32).astype(dtype) for i in range(3)]
+    out = flash_attention(q, k, v, causal, None, bq, bk, True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [32, 100])
+def test_flash_attention_sliding_window(window):
+    B, H, S, d = 1, 2, 256, 32
+    q, k, v = [jax.random.normal(jax.random.key(i), (B, H, S, d))
+               for i in range(3)]
+    out = flash_attention(q, k, v, True, window, 64, 64, True)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+def test_flash_attention_grad_matches_ref():
+    B, H, S, d = 1, 2, 128, 32
+    q, k, v = [jax.random.normal(jax.random.key(i), (B, H, S, d))
+               for i in range(3)]
+
+    def f_kernel(q, k, v):
+        return (flash_attention(q, k, v, True, None, 64, 64, True) ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (attention_ref(q, k, v, causal=True) ** 2).sum()
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=3e-5)
+
+
+def test_gqa_wrapper_expands_kv():
+    B, S, H, KV, d = 2, 128, 8, 2, 32
+    q = jax.random.normal(jax.random.key(0), (B, S, H, d))
+    k = jax.random.normal(jax.random.key(1), (B, S, KV, d))
+    v = jax.random.normal(jax.random.key(2), (B, S, KV, d))
+    out = gqa_flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                              interpret=True)
+    kk = jnp.repeat(k, H // KV, axis=2).swapaxes(1, 2)
+    vv = jnp.repeat(v, H // KV, axis=2).swapaxes(1, 2)
+    ref = attention_ref(q.swapaxes(1, 2), kk, vv, causal=True).swapaxes(1, 2)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("L,chunk", [(128, 32), (256, 64), (256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(L, chunk, dtype):
+    B, H, P, N = 2, 2, 16, 32
+    ks = jax.random.split(jax.random.key(L + chunk), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, L, H, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, L, H, N)) * 0.3
+    y, s = ssd_scan_pallas(x.astype(dtype), dt.astype(dtype), A,
+                           Bm.astype(dtype), Cm.astype(dtype),
+                           chunk=chunk, interpret=True)
+    yr, sr = ssd_scan_ref(x, dt, A, Bm, Cm)
+    tol = 3e-5 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(y, np.float32), yr, atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(s, np.float32), sr,
+                               atol=tol, rtol=tol)
+
+
+def test_ssd_scan_state_continuity():
+    """Scanning two halves with carried state == one full scan."""
+    B, L, H, P, N = 1, 128, 1, 8, 16
+    ks = jax.random.split(jax.random.key(9), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, L, H, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, L, H, N)) * 0.3
+    _, s_full = ssd_scan_ref(x, dt, A, Bm, Cm)
+    _, s_k = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=32, interpret=True)
+    np.testing.assert_allclose(s_k, s_full, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused flash attention (Pallas forward + Pallas backward)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 96)])
+@pytest.mark.parametrize("S,bq,bk", [(128, 64, 64), (256, 128, 64)])
+def test_flash_fused_backward_matches_ref(causal, window, S, bq, bk):
+    from repro.kernels.flash_attention.ops import flash_attention_fused
+    B, H, d = 1, 2, 32
+    q, k, v = [jax.random.normal(jax.random.key(i), (B, H, S, d))
+               for i in range(3)]
+
+    def f(q, k, v):
+        return (flash_attention_fused(q, k, v, causal, window, bq, bk, True)
+                ** 2).sum()
+
+    def fr(q, k, v):
+        return (attention_ref(q, k, v, causal=causal, window=window) ** 2).sum()
+
+    g1 = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=2e-5)
+
+
+def test_flash_fwd_lse_matches_logsumexp():
+    from repro.kernels.flash_attention.flash_attention import flash_attention_fwd_lse
+    B, H, S, d = 1, 1, 128, 16
+    q, k, v = [jax.random.normal(jax.random.key(i), (B, H, S, d))
+               for i in range(3)]
+    _, lse = flash_attention_fwd_lse(q, k, v, causal=True, block_q=64,
+                                     block_k=64, interpret=True)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k) / np.sqrt(d)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    logits = jnp.where(mask, logits, -1e30)
+    ref = jax.scipy.special.logsumexp(logits, axis=-1)
+    np.testing.assert_allclose(lse[..., 0], ref, atol=1e-4)

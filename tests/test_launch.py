@@ -1,0 +1,114 @@
+"""Launch-layer logic that runs without the 512-device dry-run env."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch import steps as S
+from repro.launch.mesh import make_host_mesh
+
+MESH1 = AbstractMesh((16, 16), ("data", "model"))
+MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_agent_count_placements():
+    qw = get_config("qwen2-7b")          # placement=data
+    mx = get_config("mixtral-8x22b")     # placement=pod
+    assert S.agent_count(qw, MESH1) == 16
+    assert S.agent_count(qw, MESH2) == 32
+    assert S.agent_count(mx, MESH1) == 1
+    assert S.agent_count(mx, MESH2) == 2
+
+
+def test_batch_geometry_divides_exactly():
+    # (prefill shapes lower a plain forward — no meta geometry needed)
+    shape = INPUT_SHAPES["train_4k"]
+    for arch in ["qwen2-7b", "mixtral-8x22b"]:
+        cfg = get_config(arch)
+        for mesh in (MESH1, MESH2):
+            K = S.agent_count(cfg, mesh)
+            T, tb = S.batch_geometry(cfg, shape, K)
+            assert K * T * tb * 2 == shape.global_batch
+
+
+def test_split_meta_batch_layout():
+    cfg = get_config("qwen2-7b")
+    B, Sq = 32, 8
+    batch = {"tokens": jnp.arange(B * Sq).reshape(B, Sq)}
+    sup, qry = S.split_meta_batch(cfg, batch, K=4, T=2, tb=2)
+    assert sup["tokens"].shape == (4, 2, 2, Sq)
+    assert qry["tokens"].shape == (4, 2, 2, Sq)
+    # support/query are disjoint halves of each task's rows
+    joined = jnp.concatenate([sup["tokens"], qry["tokens"]], axis=2)
+    np.testing.assert_array_equal(joined.reshape(B, Sq), batch["tokens"])
+
+
+def test_input_specs_train_shapes():
+    specs = S.input_specs(get_config("qwen2-7b"), "train_4k")
+    assert specs["tokens"].shape == (256, 4096)
+    assert specs["labels"].dtype == jnp.int32
+    w = S.input_specs(get_config("whisper-large-v3"), "train_4k")
+    assert w["encoder_frames"].shape == (256, 1500, 1280)
+    v = S.input_specs(get_config("llama-3.2-vision-90b"), "train_4k")
+    assert v["image_patches"].shape == (256, 576, 8192)
+
+
+def test_input_specs_decode_cache():
+    specs = S.input_specs(get_config("command-r-35b"), "decode_32k")
+    assert specs["token"].shape == (128, 1)
+    assert specs["pos"].shape == (128,)
+    leaves = jax.tree.leaves(specs["cache"])
+    # 40 layers of K + V at (B, S, KV, hd)
+    assert any(l.shape == (40, 128, 32768, 8, 128) for l in leaves)
+
+
+def test_decode_cache_swa_is_window_bounded():
+    specs = S.input_specs(get_config("mixtral-8x22b"), "long_500k")
+    for l in jax.tree.leaves(specs["cache"]):
+        assert l.shape[2] <= 4096   # ring buffer, not 524288
+
+
+def test_mamba_long_context_cache_constant():
+    specs = S.input_specs(get_config("mamba2-130m"), "long_500k")
+    total = sum(np.prod(l.shape) for l in jax.tree.leaves(specs["cache"]))
+    assert total < 50e6             # O(1) state, not O(seq)
+
+
+def test_train_bundle_builds_on_host_mesh():
+    """Full bundle construction + one real step on the host mesh."""
+    from repro.configs.base import InputShape
+    cfg = get_config("qwen2-1.5b").reduced()
+    INPUT_SHAPES["t_test"] = InputShape("t_test", 16, 8, "train")
+    mesh = make_host_mesh()
+    with mesh:
+        bundle = S.build_train(cfg, mesh, "t_test")
+        state = bundle.init_state(seed=0)
+        batch = {
+            "tokens": jnp.zeros((8, 16), jnp.int32),
+            "labels": jnp.zeros((8, 16), jnp.int32),
+        }
+        state2, metrics = jax.jit(bundle.step_fn)(state, batch)
+        assert bool(jnp.isfinite(metrics["loss"]))
+        assert int(state2.step) == 1
+    del INPUT_SHAPES["t_test"]
+
+
+def test_meta_config_for_uses_arch_fields():
+    cfg = get_config("deepseek-v2-lite-16b")
+    mcfg = S.meta_config_for(cfg, K=16, T=2)
+    assert mcfg.mode == "fomaml"
+    assert mcfg.num_agents == 16
+    assert mcfg.outer_optimizer == "momentum"
+    mcfg1 = S.meta_config_for(cfg, K=1, T=2)
+    assert mcfg1.combine == "none"   # degenerate single-agent case
+
+
+def test_opt_state_axes_match_structures():
+    p_axes = {"w": ("agent", "embed", "ffn")}
+    assert S.opt_state_axes("sgd", p_axes) == ()
+    mom = S.opt_state_axes("momentum", p_axes)
+    assert mom.velocity == p_axes
+    ad = S.opt_state_axes("adam", p_axes)
+    assert ad.mu == p_axes and ad.nu == p_axes and ad.step == ()

@@ -1,0 +1,115 @@
+"""MAML meta-gradient correctness (paper eq. 2-4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import maml
+
+
+def quad_loss(params, batch):
+    """Q(w; (H, b)) = ½ wᵀH w − bᵀw  — analytic meta-gradient available."""
+    H, b = batch
+    w = params["w"]
+    return 0.5 * w @ H @ w - b @ w
+
+
+def _rand_spd(key, n=4):
+    M = jax.random.normal(key, (n, n))
+    return M @ M.T / n + 0.5 * jnp.eye(n)
+
+
+@given(seed=st.integers(0, 40), alpha=st.floats(0.01, 0.2))
+@settings(max_examples=25, deadline=None)
+def test_meta_grad_matches_analytic(seed, alpha):
+    """For quadratic loss the exact meta-gradient (eq. 4) is
+    (I − αH) ∇Q(w − α∇Q(w)) with ∇Q(w) = Hw − b."""
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    H = _rand_spd(k1)
+    b = jax.random.normal(k2, (4,))
+    w = jax.random.normal(k3, (4,))
+    params = {"w": w}
+    batch = (H, b)
+    _, g = maml.meta_grad(quad_loss, params, batch, batch, alpha=alpha)
+    gw = H @ w - b
+    w_ad = w - alpha * gw
+    expected = (jnp.eye(4) - alpha * H) @ (H @ w_ad - b)
+    np.testing.assert_allclose(g["w"], expected, rtol=1e-4, atol=1e-5)
+
+
+@given(seed=st.integers(0, 20))
+@settings(max_examples=15, deadline=None)
+def test_fomaml_drops_curvature(seed):
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    H = _rand_spd(k1)
+    b = jax.random.normal(k2, (4,))
+    w = jax.random.normal(k3, (4,))
+    alpha = 0.1
+    batch = (H, b)
+    _, g = maml.meta_grad(quad_loss, {"w": w}, batch, batch, alpha=alpha,
+                          mode="fomaml")
+    gw = H @ w - b
+    expected = H @ (w - alpha * gw) - b    # no (I − αH) factor
+    np.testing.assert_allclose(g["w"], expected, rtol=1e-4, atol=1e-5)
+
+
+def test_modes_agree_as_alpha_to_zero():
+    k = jax.random.key(0)
+    H = _rand_spd(k)
+    b = jnp.ones(4)
+    w = jnp.arange(4.0)
+    batch = (H, b)
+    for alpha in [1e-3, 1e-5]:
+        _, g2 = maml.meta_grad(quad_loss, {"w": w}, batch, batch, alpha=alpha)
+        _, g1 = maml.meta_grad(quad_loss, {"w": w}, batch, batch, alpha=alpha,
+                               mode="fomaml")
+        diff = float(jnp.max(jnp.abs(g2["w"] - g1["w"])))
+        assert diff < 50 * alpha  # curvature term is O(α·λmax·‖u‖)
+
+
+def test_multi_step_inner_adapt_descends():
+    H = _rand_spd(jax.random.key(1))
+    b = jnp.ones(4)
+    batch = (H, b)
+    params = {"w": jnp.zeros(4)}
+    losses = [float(quad_loss(params, batch))]
+    for steps in [1, 3, 10]:
+        ad = maml.inner_adapt(quad_loss, params, batch, alpha=0.1, steps=steps)
+        losses.append(float(quad_loss(ad, batch)))
+    assert losses == sorted(losses, reverse=True)
+
+
+def test_inner_remat_does_not_change_grad():
+    H = _rand_spd(jax.random.key(2))
+    b = jnp.ones(4)
+    w = jnp.arange(4.0) * 0.3
+    batch = (H, b)
+    _, g_rm = maml.meta_grad(quad_loss, {"w": w}, batch, batch, alpha=0.1)
+    ad_no = maml.inner_adapt(quad_loss, {"w": w}, batch, alpha=0.1, remat=False)
+    g_no = jax.grad(lambda p: quad_loss(
+        maml.inner_adapt(quad_loss, p, batch, alpha=0.1, remat=False), batch)
+    )({"w": w})
+    np.testing.assert_allclose(g_rm["w"], g_no["w"], rtol=1e-5)
+
+
+def test_multi_task_meta_grad_averages():
+    H1 = _rand_spd(jax.random.key(3))
+    H2 = _rand_spd(jax.random.key(4))
+    b = jnp.ones(4)
+    w = {"w": jnp.arange(4.0) * 0.1}
+    sup = (jnp.stack([H1, H2]), jnp.stack([b, b]))
+    _, g_avg = maml.multi_task_meta_grad(quad_loss, w, sup, sup, alpha=0.1)
+    _, g1 = maml.meta_grad(quad_loss, w, (H1, b), (H1, b), alpha=0.1)
+    _, g2 = maml.meta_grad(quad_loss, w, (H2, b), (H2, b), alpha=0.1)
+    np.testing.assert_allclose(g_avg["w"], (g1["w"] + g2["w"]) / 2, rtol=1e-5)
+
+
+def test_reptile_direction():
+    H = _rand_spd(jax.random.key(5))
+    b = jnp.ones(4)
+    w = {"w": jnp.zeros(4)}
+    batch = (H, b)
+    _, g = maml.meta_grad(quad_loss, w, batch, batch, alpha=0.1, mode="reptile")
+    ad = maml.inner_adapt(quad_loss, w, batch, alpha=0.1, first_order=True)
+    np.testing.assert_allclose(g["w"], (w["w"] - ad["w"]) / 0.1, rtol=1e-5)

@@ -1,0 +1,82 @@
+"""Combination-matrix properties (paper Assumption 6 + Thm 1 quantities)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as T
+
+TOPOS = ["ring", "full", "star", "grid", "torus", "erdos", "paper"]
+
+
+@pytest.mark.parametrize("topo", TOPOS)
+@pytest.mark.parametrize("K", [2, 4, 6, 9, 16])
+def test_metropolis_doubly_stochastic_and_primitive(topo, K):
+    if topo == "paper" and K != 6:
+        pytest.skip("paper graph is K=6")
+    A = T.combination_matrix(K, topo)
+    assert T.is_doubly_stochastic(A)
+    assert T.is_primitive(A)
+
+
+@pytest.mark.parametrize("K", [3, 8, 16])
+def test_uniform_rule_doubly_stochastic(K):
+    A = T.combination_matrix(K, "ring", rule="uniform")
+    assert T.is_doubly_stochastic(A)
+
+
+@given(K=st.integers(3, 24), seed=st.integers(0, 50))
+@settings(max_examples=30, deadline=None)
+def test_erdos_connected_and_mixing(K, seed):
+    A = T.combination_matrix(K, "erdos", seed=seed)
+    assert T.is_doubly_stochastic(A)
+    lam2 = T.mixing_rate(A)
+    assert 0.0 <= lam2 < 1.0  # connected + primitive => strict contraction
+
+
+def test_mixing_rate_orders_topologies():
+    """Denser graphs mix faster: λ₂(full) < λ₂(ring) for the same K."""
+    K = 12
+    lam_full = T.mixing_rate(T.combination_matrix(K, "full"))
+    lam_ring = T.mixing_rate(T.combination_matrix(K, "ring"))
+    assert lam_full < lam_ring < 1.0
+
+
+def test_full_graph_metropolis_is_uniform_average():
+    K = 5
+    A = T.combination_matrix(K, "full")
+    assert np.allclose(A, np.ones((K, K)) / K)
+    assert T.mixing_rate(A) < 1e-8
+
+
+def test_paper_graph_shape():
+    A = T.combination_matrix(6, "paper")
+    assert A.shape == (6, 6)
+    assert T.is_doubly_stochastic(A)
+    # 8 undirected edges -> 16 off-diagonal nonzeros
+    assert (A > 0).sum() - (np.diagonal(A) > 0).sum() == 16
+
+
+def test_permute_offsets_ring():
+    K = 8
+    A = T.combination_matrix(K, "ring")
+    offs = T.permute_offsets(A, K)
+    assert sorted(offs) == [1, K - 1]
+    assert T.is_circulant(A)
+
+
+def test_star_not_circulant():
+    A = T.combination_matrix(6, "star")
+    assert not T.is_circulant(A)
+
+
+@given(K=st.integers(2, 16))
+@settings(max_examples=15, deadline=None)
+def test_contraction_bound(K):
+    """‖(Aᵀ − 11ᵀ/K) x‖ ≤ λ₂ ‖x‖ for mean-zero x (Thm 1 mechanism)."""
+    A = T.combination_matrix(K, "ring")
+    lam2 = T.mixing_rate(A)
+    rng = np.random.default_rng(K)
+    x = rng.normal(size=(K, 5))
+    x -= x.mean(axis=0, keepdims=True)
+    y = A.T @ x
+    assert np.linalg.norm(y) <= lam2 * np.linalg.norm(x) + 1e-9
