@@ -270,33 +270,39 @@ def bench_thm2_stationarity(quick: bool):
 
 
 def bench_combine_strategies(quick: bool):
-    """Collective cost of the combine step: dense einsum vs sparse
-    (ppermute-schedule, host-emulated) vs centralized, on a 1M-param
-    launch model, K=16 ring."""
+    """Combine backend shoot-out through the unified registry entry point:
+    wall time + modeled collective bytes/step per backend, on a 1M-param
+    launch model, K=16 ring.  The pallas backend runs compiled on TPU and
+    in interpreter mode elsewhere (correctness row, not a perf row)."""
     K = 16
     A = topology.combination_matrix(K, "ring")
     lam2 = topology.mixing_rate(A)
     phi = {"w": jax.random.normal(jax.random.key(0), (K, 1024, 1024)),
            "b": jax.random.normal(jax.random.key(1), (K, 4096))}
     nbytes = sum(x.nbytes // K for x in jax.tree.leaves(phi))
-    dense = jax.jit(lambda p: diffusion.dense_combine(jnp.asarray(A), p))
-    sparse = jax.jit(lambda p: diffusion.sparse_combine_host(A, p))
-    cent = jax.jit(diffusion.centralized_combine)
-    us_d = _timed(dense, phi)
-    us_s = _timed(sparse, phi)
-    us_c = _timed(cent, phi)
-    deg = int((A[:, 0] > 0).sum() - 1)
-    emit("combine_dense", us_d,
-         f"wire_bytes_model={(K - 1) * nbytes};lambda2={lam2:.3f}")
-    emit("combine_sparse_ring", us_s,
-         f"wire_bytes_model={deg * nbytes};lambda2={lam2:.3f}")
-    emit("combine_centralized", us_c,
-         f"wire_bytes_model={2 * (K - 1) * nbytes // K};lambda2=0.0")
-    d = dense(phi)
-    s = sparse(phi)
-    err = max(float(jnp.max(jnp.abs(a - b)))
-              for a, b in zip(jax.tree.leaves(d), jax.tree.leaves(s)))
-    emit("combine_sparse_equals_dense", 0.0, f"max_err={err:.2e}")
+    on_tpu = jax.default_backend() == "tpu"
+    backends = ["dense", "sparse_host", "centralized", "pallas"]
+    outs = {}
+    for name in backends:
+        # interpreter-mode pallas: bigger blocks keep the grid (and the
+        # python-loop interpret overhead) small
+        bm = 8192 if (name == "pallas" and not on_tpu) else 512
+        fn = jax.jit(diffusion.make_combine(name, A=A, block_m=bm))
+        us = _timed(fn, phi)
+        outs[name] = fn(phi)
+        wire = diffusion.combine_wire_bytes(A, name, nbytes)
+        # centralized replaces A with (1/K)11^T, whose mixing rate is 0
+        lam = 0.0 if name == "centralized" else lam2
+        emit(f"combine_{name}", us,
+             f"combine_bytes_step={wire};lambda2={lam:.3f}"
+             + ("" if name != "pallas" or on_tpu else ";interpret=1"))
+    auto = diffusion.select_backend(A)
+    emit("combine_auto_selects", 0.0, f"backend={auto}")
+    ref = jax.tree.leaves(outs["dense"])
+    for name in ["sparse_host", "pallas"]:
+        err = max(float(jnp.max(jnp.abs(a - b)))
+                  for a, b in zip(ref, jax.tree.leaves(outs[name])))
+        emit(f"combine_{name}_equals_dense", 0.0, f"max_err={err:.2e}")
 
 
 def bench_kernels(quick: bool):

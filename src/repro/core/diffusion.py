@@ -5,25 +5,66 @@ every parameter leaf.  The combine step (paper eq. 6b)
 
     w_{k,i} = Σ_l a_{lk} φ_{l,i}
 
-is a contraction over that axis.  Three interchangeable implementations:
+is a contraction over that axis — the algorithm's only communication point.
+This module is the single home for every implementation of that contraction,
+organized as a **backend registry** behind one entry point,
+:func:`make_combine`.  Trainer (``core/meta_trainer.py``), launch
+(``launch/steps.py``) and benchmarks (``benchmarks/run.py``) all build their
+combine through it.
 
-``dense_combine``       einsum against the full K×K matrix.  Under pjit with
-                        the agent axis sharded over a mesh axis, XLA lowers
-                        this to all-gather + local reduction: O(K·|w|)
-                        collective bytes.  This is the paper-faithful
-                        baseline semantics for arbitrary graphs.
-``sparse_combine``      shard_map + lax.ppermute, one collective-permute per
-                        circular neighbor offset: O(deg·|w|) bytes.  Exactly
-                        equal to dense_combine (assert-tested) whenever A's
-                        sparsity is a union of circular offsets (ring, torus
-                        on the agent axis, full graph).
-``centralized_combine`` every agent receives the centroid (fully-connected
-                        uniform A = (1/K)11ᵀ): the paper's centralized
-                        reference, an all-reduce.
-``no_combine``          identity: the non-cooperative baseline (A = I).
+Registered backends
+===================
+
+``dense``        einsum against the full K×K matrix.  Under pjit with the
+                 agent axis sharded over a mesh axis, XLA lowers this to
+                 all-gather + local reduction: O(K·|w|) collective bytes.
+                 Paper-faithful baseline semantics for arbitrary graphs.
+``sparse_host``  host-roll emulation of the ppermute schedule: one weighted
+                 ``jnp.roll`` per circular neighbor offset.  Under GSPMD a
+                 roll on the agent-sharded dim lowers to collective-permutes
+                 of one shard per offset: O(deg·|w|) bytes.  Exact for *any*
+                 A (offsets with partial support get elementwise-zero
+                 weights), efficient when A is a union of few circular
+                 offsets (ring, torus-on-agent-axis, full graph).
+``sparse``       ``lax.ppermute`` schedule, to be called *inside* an
+                 existing shard_map/manual context where the agent axis is
+                 one-agent-per-shard.
+``mesh_sparse``  production sparse combine: the ``sparse`` schedule wrapped
+                 in a partial-manual shard_map over the agent mesh axis
+                 (built via :mod:`repro.compat`, so it runs on jax 0.4.x
+                 and >= 0.5 alike).  Requires jit.
+``pallas``       the fused :mod:`repro.kernels.dif_combine` TPU kernel:
+                 one pass over the parameter bytes instead of K−1 separate
+                 axpy passes.  Arbitrary parameter pytrees are served
+                 through the flatten-to-(K, M) pack/unpack path below
+                 (lane-aligned zero padding, one kernel launch per dtype
+                 group).  ``interpret=True`` runs the same kernel on CPU.
+``centralized``  every agent receives the centroid (fully-connected uniform
+                 A = (1/K)11ᵀ): the paper's centralized reference.
+``none``         identity: the non-cooperative baseline (A = I).
+
+Backend selection
+=================
+
+``make_combine("auto", A=A, mesh=..., axis_name=...)`` picks by topology,
+mesh and accelerator:
+
+  1. K == 1                                  → ``none``
+  2. circular-offset-sparse A (deg < K−1) on a live mesh whose
+     ``axis_name`` extent equals K           → ``mesh_sparse``
+  3. circular-offset-sparse A, no mesh       → ``sparse_host``
+  4. dense A, no mesh, TPU backend           → ``pallas``
+     (on a live mesh the packed layout would break leaf shardings,
+     so dense-einsum keeps the GSPMD lowering)
+  5. otherwise                               → ``dense``
+
+Supported JAX versions: 0.4.x (tested on 0.4.37) and >= 0.5 — every
+version-sensitive construct (shard_map flavor, AbstractMesh constructor)
+goes through :mod:`repro.compat`.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Callable
 
@@ -31,7 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import topology as topo
+from repro import compat
 
 PyTree = Any
 CombineFn = Callable[[PyTree], PyTree]
@@ -40,14 +81,30 @@ __all__ = [
     "dense_combine",
     "sparse_combine_host",
     "make_sparse_combine",
+    "make_mesh_sparse_combine",
+    "make_pallas_combine",
+    "pack_pytree",
     "centralized_combine",
     "no_combine",
+    "CombineBackend",
+    "register_backend",
+    "combine_backends",
+    "select_backend",
     "make_combine",
     "atc_step",
     "cta_step",
     "disagreement",
     "centroid",
 ]
+
+LANE = 128                 # TPU vector lane width; pallas pad granularity
+
+
+def _circular_offsets(A: np.ndarray) -> list[int]:
+    """Offsets d in [1, K) with any nonzero weight a_{(k-d) mod K, k}."""
+    K = A.shape[0]
+    return [d for d in range(1, K)
+            if any(A[(k - d) % K, k] > 0 for k in range(K))]
 
 
 # ---------------------------------------------------------------------------
@@ -66,23 +123,24 @@ def dense_combine(A: jax.Array, phi: PyTree) -> PyTree:
 def sparse_combine_host(A: np.ndarray, phi: PyTree) -> PyTree:
     """Single-host emulation of the ppermute schedule using jnp.roll.
 
-    Used by tests to validate the sparse schedule without a multi-device
-    mesh; identical math to :func:`make_sparse_combine`.
+    Identical math to :func:`make_sparse_combine`; under GSPMD with the
+    agent dim sharded, each roll lowers to a collective-permute while every
+    other (TP) dim keeps its sharding.
     """
+    A = np.asarray(A)
     K = A.shape[0]
-    offsets = [d for d in range(1, K)
-               if any(A[(k - d) % K, k] > 0 for k in range(K))]
+    offsets = _circular_offsets(A)
     self_w = jnp.asarray(np.diagonal(A).copy())
+    off_w = {d: jnp.asarray(np.array([A[(k - d) % K, k] for k in range(K)]))
+             for d in offsets}
 
     def leaf(x):
         shape = (K,) + (1,) * (x.ndim - 1)
         acc = x * self_w.astype(x.dtype).reshape(shape)
         for d in offsets:
-            w_d = jnp.asarray(
-                np.array([A[(k - d) % K, k] for k in range(K)]), dtype=x.dtype
-            ).reshape(shape)
             # agent k receives from agent (k - d) mod K  ==  roll by +d
-            acc = acc + w_d * jnp.roll(x, d, axis=0)
+            acc = acc + (off_w[d].astype(x.dtype).reshape(shape)
+                         * jnp.roll(x, d, axis=0))
         return acc
 
     return jax.tree.map(leaf, phi)
@@ -98,9 +156,9 @@ def make_sparse_combine(A: np.ndarray, axis_name: str) -> CombineFn:
     bytes = (#offsets) · |w| vs. (K-1)/K · K · |w| for the all-gather that
     XLA emits for the dense einsum.
     """
+    A = np.asarray(A)
     K = A.shape[0]
-    offsets = [d for d in range(1, K)
-               if any(A[(k - d) % K, k] > 0 for k in range(K))]
+    offsets = _circular_offsets(A)
     self_w = np.diagonal(A).copy()
     off_w = {d: np.array([A[(k - d) % K, k] for k in range(K)]) for d in offsets}
 
@@ -126,6 +184,7 @@ def make_mesh_sparse_combine(A: np.ndarray, mesh, axis_name: str,
     """Production sparse combine: shard_map over the agent mesh axis with the
     ppermute schedule of :func:`make_sparse_combine`.  The agent axis is
     manual; all other axes (e.g. 'model' tensor parallelism) stay auto.
+    Partial-manual shard_map must run under jit (both JAX lines).
 
     ``in_specs``: pytree of PartitionSpecs matching phi's *actual* shardings
     (agent dim on ``axis_name`` plus whatever TP axes each leaf carries).
@@ -135,16 +194,23 @@ def make_mesh_sparse_combine(A: np.ndarray, mesh, axis_name: str,
 
     Wire bytes per device for the exchange itself: (#circular offsets) ×
     |w_local|, vs. (K−1)/K × K × |w_local| for the dense-einsum all-gather."""
-    import jax as _jax
     from jax.sharding import PartitionSpec as _P
 
     inner = make_sparse_combine(A, axis_name)
     specs = in_specs if in_specs is not None else _P(axis_name)
+    # Every axis the specs mention must be manual; any remaining mesh axis
+    # stays auto (partial-manual mode — fine on TPU, but XLA:CPU cannot
+    # partition it, so CPU callers should pass specs covering their axes).
+    manual = {axis_name}
+    for s in compat.tree_leaves(specs, is_leaf=lambda x: isinstance(x, _P)):
+        for part in s:
+            if part is not None:
+                manual.update((part,) if isinstance(part, str) else part)
 
     def combine(phi: PyTree) -> PyTree:
-        return _jax.shard_map(
-            inner, mesh=mesh, in_specs=specs, out_specs=specs,
-            axis_names={axis_name}, check_vma=False)(phi)
+        return compat.shard_map(
+            inner, mesh, in_specs=(specs,), out_specs=specs,
+            axis_names=manual)(phi)
 
     return combine
 
@@ -162,24 +228,229 @@ def no_combine(phi: PyTree) -> PyTree:
     return phi
 
 
+# ---------------------------------------------------------------------------
+# Pallas backend: flatten-to-(K, M) pack/unpack so the fused kernel serves
+# arbitrary parameter pytrees (ragged leaf sizes, mixed dtypes)
+# ---------------------------------------------------------------------------
+
+def pack_pytree(phi: PyTree, block_m: int = 512
+                ) -> tuple[list[jax.Array], Callable[[list[jax.Array]], PyTree]]:
+    """Pack a pytree of (K, ...) leaves into one (K, M_pad) buffer per dtype.
+
+    Leaves are flattened to (K, m_i) and concatenated along the feature dim,
+    then zero-padded so M_pad is the smallest multiple of ``block_m`` (keep
+    ``block_m`` a multiple of the 128-lane width for full-width VPU
+    reductions) covering the group.  Because the combine is linear and the
+    pad is zero, padded columns stay zero through the kernel and are sliced
+    off on unpack.
+
+    Returns ``(buffers, unpack)`` where ``unpack`` maps same-shaped combined
+    buffers back to the original pytree structure.
+    """
+    leaves, treedef = jax.tree.flatten(phi)
+    if not leaves:
+        return [], lambda bufs: jax.tree.unflatten(treedef, [])
+    K = leaves[0].shape[0]
+    groups: dict[Any, list[int]] = {}
+    for i, x in enumerate(leaves):
+        groups.setdefault(jnp.dtype(x.dtype), []).append(i)
+
+    buffers: list[jax.Array] = []
+    layout: list[tuple[list[int], list[tuple[int, ...]]]] = []
+    for dt, idxs in groups.items():
+        flats = [leaves[i].reshape(K, -1) for i in idxs]
+        M = sum(f.shape[1] for f in flats)
+        pad = (-M) % block_m
+        if pad:
+            flats.append(jnp.zeros((K, pad), dt))
+        buffers.append(jnp.concatenate(flats, axis=1) if len(flats) > 1
+                       else flats[0])
+        layout.append((idxs, [leaves[i].shape for i in idxs]))
+
+    def unpack(new_buffers: list[jax.Array]) -> PyTree:
+        out: list[Any] = list(leaves)
+        for buf, (idxs, shapes) in zip(new_buffers, layout):
+            off = 0
+            for i, shape in zip(idxs, shapes):
+                n = int(np.prod(shape[1:], dtype=np.int64))
+                out[i] = jax.lax.slice_in_dim(buf, off, off + n,
+                                              axis=1).reshape(shape)
+                off += n
+        return jax.tree.unflatten(treedef, out)
+
+    return buffers, unpack
+
+
+def make_pallas_combine(A: np.ndarray | jax.Array, *, block_m: int = 512,
+                        interpret: bool | None = None) -> CombineFn:
+    """Fused dif_combine kernel over the packed (K, M) layout.
+
+    ``interpret=None`` auto-detects: compiled on TPU, interpreter elsewhere
+    (bitwise-identical math, lets CPU tests exercise the production path).
+    """
+    from repro.kernels.dif_combine.dif_combine import dif_combine
+
+    Aj = jnp.asarray(A)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    def combine(phi: PyTree) -> PyTree:
+        buffers, unpack = pack_pytree(phi, block_m=block_m)
+        outs = [dif_combine(Aj, buf, block_m=block_m, interpret=interpret)
+                for buf in buffers]
+        return unpack(outs)
+
+    return combine
+
+
+# ---------------------------------------------------------------------------
+# Backend registry + selection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CombineBackend:
+    """One registered combine implementation.
+
+    ``build(A=..., axis_name=..., mesh=..., in_specs=..., block_m=...,
+    interpret=...)`` returns a ``CombineFn``; builders ignore context keys
+    they don't need.
+    """
+    name: str
+    build: Callable[..., CombineFn]
+    needs_matrix: bool = True
+    needs_mesh: bool = False
+    needs_axis_name: bool = False
+
+
+_BACKENDS: dict[str, CombineBackend] = {}
+
+
+def register_backend(name: str, **flags: bool):
+    """Decorator: register a combine builder under ``name``."""
+
+    def deco(build: Callable[..., CombineFn]) -> Callable[..., CombineFn]:
+        _BACKENDS[name] = CombineBackend(name, build, **flags)
+        return build
+
+    return deco
+
+
+def combine_backends() -> tuple[str, ...]:
+    return tuple(_BACKENDS)
+
+
+@register_backend("dense")
+def _build_dense(*, A, **_ctx) -> CombineFn:
+    return functools.partial(dense_combine, jnp.asarray(A))
+
+
+@register_backend("sparse_host")
+def _build_sparse_host(*, A, **_ctx) -> CombineFn:
+    return functools.partial(sparse_combine_host, np.asarray(A))
+
+
+@register_backend("sparse", needs_axis_name=True)
+def _build_sparse(*, A, axis_name, **_ctx) -> CombineFn:
+    return make_sparse_combine(np.asarray(A), axis_name)
+
+
+@register_backend("mesh_sparse", needs_mesh=True, needs_axis_name=True)
+def _build_mesh_sparse(*, A, mesh, axis_name, in_specs=None, **_ctx
+                       ) -> CombineFn:
+    A = np.asarray(A)
+    K = A.shape[0]
+    extent = compat.mesh_axis_sizes(mesh).get(axis_name)
+    if extent != K:
+        raise ValueError(
+            f"mesh_sparse needs one agent per shard: axis {axis_name!r} has "
+            f"extent {extent} but A is {K}x{K}. Use 'sparse_host' when the "
+            f"agent axis spans multiple mesh axes (e.g. multi-pod data "
+            f"placement).")
+    return make_mesh_sparse_combine(A, mesh, axis_name, in_specs=in_specs)
+
+
+@register_backend("pallas")
+def _build_pallas(*, A, block_m=512, interpret=None, **_ctx) -> CombineFn:
+    return make_pallas_combine(A, block_m=block_m, interpret=interpret)
+
+
+@register_backend("centralized", needs_matrix=False)
+def _build_centralized(**_ctx) -> CombineFn:
+    return centralized_combine
+
+
+@register_backend("none", needs_matrix=False)
+def _build_none(**_ctx) -> CombineFn:
+    return no_combine
+
+
+def select_backend(A: np.ndarray | None, *, mesh=None,
+                   axis_name: str | None = None) -> str:
+    """Pick a backend name from topology, mesh and accelerator (see module
+    docstring for the rule table)."""
+    if A is None:
+        return "dense"
+    A = np.asarray(A)
+    K = A.shape[0]
+    if K == 1:
+        return "none"
+    degree = len(_circular_offsets(A))
+    sparse_wins = degree < K - 1          # strictly fewer collectives than
+    if sparse_wins and mesh is not None and axis_name is not None:
+        if compat.mesh_axis_sizes(mesh).get(axis_name) == K:
+            return "mesh_sparse"
+    if sparse_wins:
+        return "sparse_host"
+    if mesh is None and jax.default_backend() == "tpu":
+        # fused one-pass dense reduction; only off-mesh — pack_pytree's
+        # concatenate would destroy leaf shardings on a live mesh, forcing
+        # an all-gather of every TP shard
+        return "pallas"
+    return "dense"
+
+
 def make_combine(strategy: str, A: np.ndarray | None = None,
-                 axis_name: str | None = None) -> CombineFn:
-    """Factory: 'dense' | 'sparse' | 'sparse_host' | 'centralized' | 'none'."""
-    if strategy == "dense":
-        assert A is not None
-        Aj = jnp.asarray(A)
-        return functools.partial(dense_combine, Aj)
-    if strategy == "sparse":
-        assert A is not None and axis_name is not None
-        return make_sparse_combine(A, axis_name)
-    if strategy == "sparse_host":
-        assert A is not None
-        return functools.partial(sparse_combine_host, A)
+                 axis_name: str | None = None, *, mesh=None,
+                 in_specs: PyTree | None = None, block_m: int = 512,
+                 interpret: bool | None = None) -> CombineFn:
+    """Single entry point: build a combine fn from a backend name or 'auto'.
+
+    ``strategy``: 'auto' | any :func:`combine_backends` name.  'auto'
+    resolves via :func:`select_backend`.
+    """
+    if strategy == "auto":
+        strategy = select_backend(A, mesh=mesh, axis_name=axis_name)
+    backend = _BACKENDS.get(strategy)
+    if backend is None:
+        raise ValueError(
+            f"unknown combine strategy {strategy!r}; "
+            f"registered: {combine_backends()}")
+    if backend.needs_matrix:
+        assert A is not None, f"{strategy!r} combine needs a matrix A"
+    if backend.needs_axis_name:
+        assert axis_name is not None, f"{strategy!r} combine needs axis_name"
+    if backend.needs_mesh:
+        assert mesh is not None, f"{strategy!r} combine needs a mesh"
+    return backend.build(A=A, axis_name=axis_name, mesh=mesh,
+                         in_specs=in_specs, block_m=block_m,
+                         interpret=interpret)
+
+
+def combine_wire_bytes(A: np.ndarray, strategy: str, model_bytes: int) -> int:
+    """Per-step collective-byte model for a backend (benchmark reporting).
+
+    ``model_bytes``: size of one agent's launch model.  dense/pallas gather
+    K−1 remote models; sparse moves one model per circular offset;
+    centralized is a reduce+broadcast (2·(K−1)/K); none moves nothing.
+    """
+    K = A.shape[0]
+    if strategy in ("none",):
+        return 0
+    if strategy in ("sparse", "sparse_host", "mesh_sparse"):
+        return len(_circular_offsets(np.asarray(A))) * model_bytes
     if strategy == "centralized":
-        return centralized_combine
-    if strategy == "none":
-        return no_combine
-    raise ValueError(f"unknown combine strategy {strategy!r}")
+        return 2 * (K - 1) * model_bytes // K
+    return (K - 1) * model_bytes
 
 
 # ---------------------------------------------------------------------------

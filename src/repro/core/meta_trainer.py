@@ -39,7 +39,7 @@ class MetaConfig:
     inner_lr: float = 0.01            # α
     inner_steps: int = 1
     mode: str = "maml"                # maml | fomaml | reptile
-    combine: str = "dense"            # dense | sparse | sparse_host | centralized | none
+    combine: str = "dense"            # 'auto' | any diffusion.combine_backends() name
     topology: str = "paper"           # ring | grid | torus | full | star | erdos | paper
     comb_rule: str = "metropolis"
     outer_optimizer: str = "adam"
@@ -95,15 +95,17 @@ def make_meta_step(
     ``support``/``query``: pytrees of arrays with leading axes
     ``(K, tasks_per_agent, task_batch, ...)``.
 
-    ``combine_fn`` overrides the combine (e.g. a shard_map'ped sparse
-    combine built against a live mesh).
+    ``combine_fn`` overrides the combine — mesh-aware backends need the
+    leaf PartitionSpecs only the launch layer knows, so launch/steps.py
+    builds them via ``diffusion.make_combine`` and injects them here.
     """
     opt = optimizer or get_optimizer(cfg.outer_optimizer, cfg.outer_lr)
     if A is None:
         A = combination_matrix_for(cfg)
     if combine_fn is None:
         strategy = cfg.combine if cfg.num_agents > 1 else "none"
-        if strategy == "sparse":  # host-level default; mesh version injected by launch/
+        if strategy in ("sparse", "mesh_sparse"):
+            # host-level default; mesh version injected by launch/
             strategy = "sparse_host"
         combine_fn = diffusion.make_combine(strategy, A=A)
 
@@ -115,7 +117,7 @@ def make_meta_step(
 
     def step(state: TrainState, support: Any, query: Any):
         losses, grads = jax.vmap(per_agent)(state.params, support, query)
-        if cfg.grad_clip:
+        if cfg.grad_clip is not None:   # 0.0 is a valid (total) clip
             grads = jax.vmap(lambda g: clip_by_global_norm(g, cfg.grad_clip))(grads)
         updates, opt_state = opt.update(grads, state.opt_state, state.params)
         if cfg.combine_every > 1:

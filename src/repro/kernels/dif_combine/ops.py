@@ -1,16 +1,19 @@
-"""Jit'd public wrapper: combine a whole parameter pytree with one fused
-kernel launch per leaf (leaves flattened/padded to lane multiples)."""
+"""Jit'd public wrappers over the fused dif_combine kernel.
+
+``combine_tree`` delegates to the registry's packed flatten-to-(K, M) path
+(``repro.core.diffusion.make_pallas_combine``) so there is exactly one
+tree-level pallas combine implementation in the codebase: leaves are
+flattened, grouped by dtype, zero-padded to a lane-aligned block multiple,
+combined in one kernel launch per group, and sliced back.
+"""
 from __future__ import annotations
 
 import functools
 from typing import Any
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.dif_combine.dif_combine import dif_combine
-from repro.kernels.dif_combine.ref import dif_combine_ref
 
 PyTree = Any
 
@@ -18,23 +21,13 @@ PyTree = Any
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
 def combine_flat(A: jax.Array, phi: jax.Array, block_m: int = 512,
                  interpret: bool = False) -> jax.Array:
+    """Combine one pre-packed (K, M) buffer; M must divide by block_m."""
     return dif_combine(A, phi, block_m=block_m, interpret=interpret)
 
 
 def combine_tree(A: jax.Array, phi: PyTree, *, block_m: int = 512,
                  interpret: bool = False) -> PyTree:
-    """Combine every leaf (leading axis = agents).  Leaves are flattened and
-    zero-padded up to a block multiple, combined, and reshaped back."""
-    K = A.shape[0]
+    """Combine every leaf (leading axis = agents) of an arbitrary pytree."""
+    from repro.core.diffusion import make_pallas_combine
 
-    def leaf(x):
-        shape = x.shape
-        flat = x.reshape(K, -1)
-        M = flat.shape[1]
-        pad = (-M) % block_m
-        if pad:
-            flat = jnp.pad(flat, ((0, 0), (0, pad)))
-        out = combine_flat(A, flat, block_m=block_m, interpret=interpret)
-        return out[:, :M].reshape(shape)
-
-    return jax.tree.map(leaf, phi)
+    return make_pallas_combine(A, block_m=block_m, interpret=interpret)(phi)

@@ -167,7 +167,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    from repro.compat import cost_analysis as _cost_analysis
+    cost = _cost_analysis(compiled)
     hlo = compiled.as_text()
     n_dev_mesh = int(np.prod(mesh.devices.shape))
     # cost_analysis() counts while-loop bodies once (ignores trip counts) —

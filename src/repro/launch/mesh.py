@@ -9,23 +9,21 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+from repro.compat import mesh_axis_sizes
+
+__all__ = ["make_production_mesh", "make_host_mesh", "mesh_axis_sizes"]
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Tiny mesh over whatever devices exist (tests / CPU examples)."""
     n = len(jax.devices())
     data = min(data, n)
-    return jax.make_mesh(
-        (data, max(1, min(model, n // data))), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
-
-
-def mesh_axis_sizes(mesh: jax.sharding.Mesh) -> dict[str, int]:
-    return dict(zip(mesh.axis_names, mesh.devices.shape))
+    return compat.make_mesh(
+        (data, max(1, min(model, n // data))), ("data", "model"))

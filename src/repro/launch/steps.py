@@ -198,15 +198,23 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
     params_sh = tree_shardings(p_axes, p_abs, rules, mesh)
 
     multi_pod = "pod" in mesh.axis_names
-    combine_fn = None
-    if mcfg.combine == "sparse" and K > 1:
+    agent_axis = "pod" if (cfg.placement == "pod" and multi_pod) else "data"
+    strategy = mcfg.combine if K > 1 else "none"
+    if strategy == "sparse":
         # Sparse neighbor combine: weighted rolls over the agent axis.
         # Under GSPMD a roll on the agent-sharded dim lowers to
         # collective-permutes of one shard per circular offset, while every
-        # other (TP) dim keeps its sharding — unlike a partial-manual
-        # shard_map, whose in_specs may not mention auto axes and which
-        # therefore all-gathers TP shards at entry (measured +77% wire).
-        combine_fn = diffusion.make_combine("sparse_host", A=A)
+        # other (TP) dim keeps its sharding — a partial-manual shard_map
+        # whose in_specs omit the auto axes would instead all-gather TP
+        # shards at entry (measured +77% wire).  'mesh_sparse' stays
+        # selectable because build_train passes the real leaf specs below.
+        strategy = "sparse_host"
+    combine_fn = None
+    if strategy != "none":
+        param_specs = jax.tree.map(lambda s: s.spec, params_sh)
+        combine_fn = diffusion.make_combine(
+            strategy, A=A, axis_name=agent_axis, mesh=mesh,
+            in_specs=param_specs)
     freeze_mask = None
     if cfg.inner_freeze:
         # ANIL-style: the named subtree (e.g. 'encoder') is frozen in the

@@ -60,6 +60,9 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=1)
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--combine", default=None,
+                    help="combine backend override: 'auto' or any "
+                         "diffusion.combine_backends() name")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -75,7 +78,8 @@ def main() -> None:
         shape = INPUT_SHAPES[shape_name]
 
     with mesh:
-        bundle = S.build_train(cfg, mesh, shape_name)
+        bundle = S.build_train(cfg, mesh, shape_name,
+                               combine_override=args.combine)
         print(f"[train] {cfg.name}: K={bundle.K} agents, "
               f"T={bundle.T} tasks × {bundle.tb} examples, mode={cfg.meta_mode}")
         state = bundle.init_state(seed=0)

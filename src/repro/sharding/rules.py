@@ -19,6 +19,7 @@ from typing import Any, Sequence
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import mesh_axis_sizes
 from repro.configs.base import ArchConfig
 
 PyTree = Any
@@ -103,10 +104,9 @@ def rules_for(cfg: ArchConfig, mesh: Mesh, kind: str = "train") -> Rules:
     return Rules(table, priority)
 
 
-def _axis_sizes(mesh) -> dict[str, int]:
-    if hasattr(mesh, "axis_sizes"):          # works for AbstractMesh too
-        return dict(zip(mesh.axis_names, mesh.axis_sizes))
-    return dict(zip(mesh.axis_names, mesh.devices.shape))
+# Mesh/AbstractMesh axis sizes across JAX versions (kept under the old name
+# because launch/steps.py imports it).
+_axis_sizes = mesh_axis_sizes
 
 
 def spec_for(axes: Sequence[str | None], shape: Sequence[int], rules: Rules,

@@ -1,9 +1,12 @@
-"""Diffusion combine invariants (paper eq. 6b + Thm 1)."""
+"""Diffusion combine invariants (paper eq. 6b + Thm 1).
+
+Former hypothesis property tests run as seeded parametrize grids so tier-1
+collects with no optional dependencies.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import diffusion as D
 from repro.core import topology as T
@@ -15,9 +18,9 @@ def _phi(K, seed=0):
             "b": jax.random.normal(k2, (K, 3))}
 
 
-@given(K=st.integers(2, 16), topo=st.sampled_from(["ring", "full", "erdos"]),
-       seed=st.integers(0, 20))
-@settings(max_examples=25, deadline=None)
+@pytest.mark.parametrize("K", [2, 3, 7, 16])
+@pytest.mark.parametrize("topo", ["ring", "full", "erdos"])
+@pytest.mark.parametrize("seed", [0, 11])
 def test_combine_preserves_centroid(K, topo, seed):
     """Doubly-stochastic A leaves the network centroid invariant — the
     mechanism behind Thm 2 (the centroid performs unperturbed descent)."""
@@ -58,8 +61,8 @@ def test_no_combine_identity():
         np.testing.assert_array_equal(x, y)
 
 
-@given(K=st.integers(2, 12), seed=st.integers(0, 10))
-@settings(max_examples=20, deadline=None)
+@pytest.mark.parametrize("K", [2, 4, 7, 12])
+@pytest.mark.parametrize("seed", [0, 3, 9])
 def test_combine_contracts_disagreement(K, seed):
     """One combine shrinks (1/K)Σ‖w_k − w_c‖² by at least λ₂² (Thm 1)."""
     A = T.combination_matrix(K, "ring")

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.compat import cost_analysis
 from repro.launch.hlo_cost import HloCost, corrected_costs
 
 
@@ -22,8 +23,8 @@ def test_scan_flops_multiply_by_trip_count():
     assert c.flops() == pytest.approx(7 * 2 * 256 ** 3, rel=0.01)
     # XLA's own analysis undercounts (counts the body once) — that is the
     # reason this module exists
-    raw = jax.jit(scan_n).lower(
-        jax.ShapeDtypeStruct((256, 256), jnp.float32)).compile().cost_analysis()
+    raw = cost_analysis(jax.jit(scan_n).lower(
+        jax.ShapeDtypeStruct((256, 256), jnp.float32)).compile())
     assert raw["flops"] < c.flops() / 2
 
 
@@ -33,7 +34,7 @@ def test_plain_matmul_matches_xla():
     spec = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     txt = _compile_text(f, spec)
     c = HloCost(txt)
-    raw = jax.jit(f).lower(spec).compile().cost_analysis()
+    raw = cost_analysis(jax.jit(f).lower(spec).compile())
     assert c.flops() == pytest.approx(raw["flops"], rel=0.01)
 
 

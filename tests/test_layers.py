@@ -5,7 +5,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.models import layers as L
@@ -41,8 +40,7 @@ def test_layernorm_zero_mean_unit_var():
 # rope
 # ---------------------------------------------------------------------------
 
-@given(seed=st.integers(0, 20))
-@settings(max_examples=10, deadline=None)
+@pytest.mark.parametrize("seed", [0, 4, 9, 14, 20])
 def test_rope_preserves_norm(seed):
     x = jax.random.normal(jax.random.key(seed), (1, 6, 2, 16))
     pos = jnp.arange(6)[None]

@@ -118,6 +118,59 @@ def test_sparse_combine_equals_dense_in_trainer(sine_setup):
         np.testing.assert_allclose(a, b, atol=1e-5)
 
 
+def test_grad_clip_zero_is_total_clip(sine_setup):
+    """Regression: grad_clip=0.0 must clip (norm bound 0 → zero updates),
+    not silently disable clipping via truthiness."""
+    _, model = sine_setup
+    common = dict(num_agents=4, tasks_per_agent=2, inner_lr=0.01,
+                  mode="maml", combine="dense", topology="ring",
+                  outer_optimizer="sgd", outer_lr=5e-3)
+    mcfg0 = MetaConfig(grad_clip=0.0, **common)
+    mcfg_none = MetaConfig(grad_clip=None, **common)
+    state = init_state(jax.random.key(0), model.init, mcfg0,
+                       identical_init=True)
+    dists = agent_sine_distributions(4, seed=0)
+    support, query = stacked_agent_batch(dists, 2, 10)
+    support = jax.tree.map(jnp.asarray, support)
+    query = jax.tree.map(jnp.asarray, query)
+    s0, _ = jax.jit(make_meta_step(model.loss_fn, mcfg0))(state, support, query)
+    sn, _ = jax.jit(make_meta_step(model.loss_fn, mcfg_none))(state, support,
+                                                              query)
+    # clip=0.0: SGD updates vanish, combine of identical params is identity
+    for before, after in zip(jax.tree.leaves(state.params),
+                             jax.tree.leaves(s0.params)):
+        np.testing.assert_allclose(np.asarray(after), np.asarray(before),
+                                   atol=1e-6)
+    # unclipped baseline must actually move
+    moved = sum(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(sn.params),
+                                jax.tree.leaves(state.params)))
+    assert moved > 1e-5
+
+
+def test_grad_clip_finite_bounds_update_norm(sine_setup):
+    _, model = sine_setup
+    common = dict(num_agents=4, tasks_per_agent=2, inner_lr=0.01,
+                  mode="maml", combine="dense", topology="ring",
+                  outer_optimizer="sgd", outer_lr=1.0)
+    clip = 1e-3
+    mcfg = MetaConfig(grad_clip=clip, **common)
+    state = init_state(jax.random.key(0), model.init, mcfg,
+                       identical_init=True)
+    dists = agent_sine_distributions(4, seed=0)
+    support, query = stacked_agent_batch(dists, 2, 10)
+    s1, _ = jax.jit(make_meta_step(model.loss_fn, mcfg))(
+        state, jax.tree.map(jnp.asarray, support),
+        jax.tree.map(jnp.asarray, query))
+    # per-agent update norm = lr * clipped grad norm <= lr * clip; the
+    # combine is an average so it cannot increase the bound
+    delta_sq = sum(np.sum((np.asarray(a, np.float64)
+                           - np.asarray(b, np.float64)) ** 2)
+                   for a, b in zip(jax.tree.leaves(s1.params),
+                                   jax.tree.leaves(state.params)))
+    assert np.sqrt(delta_sq) <= 4 * clip * 1.0 * (1 + 1e-4)
+
+
 def test_fomaml_also_learns(sine_setup):
     _, model = sine_setup
     mcfg = MetaConfig(num_agents=4, tasks_per_agent=3, inner_lr=0.01,

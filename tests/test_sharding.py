@@ -1,14 +1,15 @@
 """Sharding-rule logic on AbstractMesh (no real devices needed)."""
 import jax
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import abstract_mesh, mesh_axis_sizes
 from repro.configs import get_config
 from repro.models.init import axes_tree, with_agent_axis
 from repro.models.transformer import build_model
 from repro.sharding.rules import rules_for, spec_for, tree_shardings
 
-MESH1 = AbstractMesh((16, 16), ("data", "model"))
-MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH1 = abstract_mesh((16, 16), ("data", "model"))
+MESH2 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_agent_dim_data_placement():
@@ -114,7 +115,7 @@ def test_every_arch_every_param_gets_valid_spec():
         specs = with_agent_axis(model.specs(), 16)
         axes = axes_tree(specs)
         for mesh in (MESH1, MESH2):
-            sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+            sizes = mesh_axis_sizes(mesh)
             r = rules_for(cfg, mesh, "train")
             flat_axes = jax.tree.leaves(
                 axes, is_leaf=lambda x: isinstance(x, tuple)

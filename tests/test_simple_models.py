@@ -30,7 +30,7 @@ def test_sine_mlp_can_fit_one_sinusoid():
     y = 2.0 * jnp.sin(x + 0.5)
     loss0 = float(model.loss_fn(params, (x, y)))
     step = jax.jit(lambda p: jax.tree.map(
-        lambda a, b: a - 0.02 * b, p, jax.grad(model.loss_fn)(p, (x, y))))
+        lambda a, b: a - 0.05 * b, p, jax.grad(model.loss_fn)(p, (x, y))))
     for _ in range(2000):   # small Finn-style init → slow plain GD
         params = step(params)
     loss1 = float(model.loss_fn(params, (x, y)))

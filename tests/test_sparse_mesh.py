@@ -10,15 +10,16 @@ import textwrap
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"   # never probe accelerator plugins
     import sys
     sys.path.insert(0, "src")
     import jax, jax.numpy as jnp
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro import compat
     from repro.core import diffusion, topology
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
     K = 4
     A = topology.combination_matrix(K, "ring")
     phi = {
@@ -30,7 +31,9 @@ SCRIPT = textwrap.dedent("""
             "w": jax.device_put(phi["w"], NamedSharding(mesh, P("data", None, "model"))),
             "b": jax.device_put(phi["b"], NamedSharding(mesh, P("data", None))),
         }
-        sparse = diffusion.make_mesh_sparse_combine(A, mesh, "data")
+        specs = {"w": P("data", None, "model"), "b": P("data", None)}
+        sparse = diffusion.make_mesh_sparse_combine(A, mesh, "data",
+                                                    in_specs=specs)
         out = jax.jit(sparse)(phi_sh)
         ref = diffusion.dense_combine(jnp.asarray(A), phi)
         for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
@@ -41,7 +44,7 @@ SCRIPT = textwrap.dedent("""
 
 def test_mesh_sparse_combine_equals_dense():
     env = dict(os.environ)
-    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", SCRIPT],
                          capture_output=True, text=True, env=env,
                          cwd=os.path.join(os.path.dirname(__file__), ".."),
