@@ -23,10 +23,11 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import (MetaConfig, init_state, make_eval_fn, make_meta_step,
                         diffusion, topology)
-from repro.data.fewshot import FewShotSampler
-from repro.data.sine import (SineTaskDistribution, agent_sine_distributions,
-                             stacked_agent_batch)
+from repro.data import (Episode, FewShotTaskSource, MetaBatchPipeline,
+                        SineTaskSource)
 from repro.models.simple import FewShotCNN, SineMLP
+
+_DEVICE_EP = Episode.to_device
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "benchmarks")
 ROWS: list[tuple[str, float, str]] = []
@@ -67,33 +68,33 @@ def _sine_train(strategy: str, steps: int, seed: int = 0, mode: str = "maml",
     state = init_state(jax.random.key(seed), model.init, mcfg,
                        identical_init=True)
     step = jax.jit(make_meta_step(model.loss_fn, mcfg))
-    dists = agent_sine_distributions(K, seed=seed)
-    evald = SineTaskDistribution(seed=999)      # full-range eval (paper)
+    source = SineTaskSource(K=K, tasks_per_agent=5, shots=10, seed=seed)
     evaln = make_eval_fn(model.loss_fn, inner_lr=cfg.inner_lr, inner_steps=1)
-    (esx, esy), (eqx, eqy) = evald.sample_batch(200, 10)
-    esx, esy, eqx, eqy = map(jnp.asarray, (esx, esy, eqx, eqy))
+    ev = source.eval_sample(200, seed=999)      # full-range eval (paper)
+    esup = jax.tree.map(jnp.asarray, ev.support)
+    eqry = jax.tree.map(jnp.asarray, ev.query)
     curve, step_us = [], None
-    for i in range(steps):
-        support, query = stacked_agent_batch(dists, 5, 10)
-        t0 = time.perf_counter()
-        state, metrics = step(state, jax.tree.map(jnp.asarray, support),
-                              jax.tree.map(jnp.asarray, query))
-        if i == steps - 1:
-            jax.block_until_ready(metrics["loss"])
-            step_us = (time.perf_counter() - t0) * 1e6
-        if i % eval_every == 0 or i == steps - 1:
-            if strategy == "noncoop":
-                # paper protocol: average of per-agent test losses
-                losses = []
-                for k in range(K):
-                    pk = jax.tree.map(lambda x: x[k], state.params)
-                    losses.append(float(np.mean(np.asarray(
-                        evaln(pk, (esx, esy), (eqx, eqy)))[:, 1])))
-                curve.append((i, float(np.mean(losses))))
-            else:
-                c = diffusion.centroid(state.params)
-                l = float(np.mean(np.asarray(evaln(c, (esx, esy), (eqx, eqy)))[:, 1]))
-                curve.append((i, l))
+    with MetaBatchPipeline(source, depth=2, prepare=_DEVICE_EP) as pipe:
+        for i in range(steps):
+            support, query = next(pipe)
+            t0 = time.perf_counter()
+            state, metrics = step(state, support, query)
+            if i == steps - 1:
+                jax.block_until_ready(metrics["loss"])
+                step_us = (time.perf_counter() - t0) * 1e6
+            if i % eval_every == 0 or i == steps - 1:
+                if strategy == "noncoop":
+                    # paper protocol: average of per-agent test losses
+                    losses = []
+                    for k in range(K):
+                        pk = jax.tree.map(lambda x: x[k], state.params)
+                        losses.append(float(np.mean(np.asarray(
+                            evaln(pk, esup, eqry))[:, 1])))
+                    curve.append((i, float(np.mean(losses))))
+                else:
+                    c = diffusion.centroid(state.params)
+                    l = float(np.mean(np.asarray(evaln(c, esup, eqry))[:, 1]))
+                    curve.append((i, l))
     return state, model, curve, step_us
 
 
@@ -117,9 +118,9 @@ def bench_fig2c_adaptation_steps(quick: bool):
     """Fig 2c: post-training test loss vs number of adaptation steps."""
     steps = 200 if quick else 1000
     n_adapt = 10
-    evald = SineTaskDistribution(seed=777)
-    (sx, sy), (qx, qy) = evald.sample_batch(200, 10)
-    sx, sy, qx, qy = map(jnp.asarray, (sx, sy, qx, qy))
+    ep = SineTaskSource(K=6).eval_sample(200, seed=777)
+    esup = jax.tree.map(jnp.asarray, ep.support)
+    eqry = jax.tree.map(jnp.asarray, ep.query)
     out = {}
     for strat in ["centralized", "dif", "noncoop"]:
         state, model, _, us = _sine_train(strat, steps)
@@ -128,11 +129,11 @@ def bench_fig2c_adaptation_steps(quick: bool):
             curves = []
             for k in range(6):
                 pk = jax.tree.map(lambda x: x[k], state.params)
-                curves.append(np.asarray(ev(pk, (sx, sy), (qx, qy))).mean(0))
+                curves.append(np.asarray(ev(pk, esup, eqry)).mean(0))
             curve = np.mean(curves, axis=0)
         else:
             c = diffusion.centroid(state.params)
-            curve = np.asarray(ev(c, (sx, sy), (qx, qy))).mean(0)
+            curve = np.asarray(ev(c, esup, eqry)).mean(0)
         out[strat] = curve.tolist()
         emit(f"fig2c_adapt_{strat}", us,
              f"loss_step1={curve[1]:.4f};loss_step10={curve[10]:.4f}")
@@ -146,9 +147,13 @@ def bench_fig3_fewshot_classification(quick: bool):
     surrogate), centralized vs Dif vs non-coop, 5-way 1-shot."""
     steps = 60 if quick else 300
     cfg = get_config("omniglot_cnn")
-    sampler = FewShotSampler(n_classes=80, n_way=cfg.vocab_size, k_shot=1,
-                             n_query=5, seed=0)
-    model = FewShotCNN(cfg, image_hw=sampler.image_hw)
+    source = FewShotTaskSource(K=6, tasks_per_agent=2, n_classes=80,
+                               n_way=cfg.vocab_size, k_shot=1, n_query=5,
+                               seed=0)
+    model = FewShotCNN(cfg, image_hw=source.image_hw)
+    test_ep = source.eval_sample(50, seed=4242)       # meta-test classes
+    tsup = jax.tree.map(jnp.asarray, test_ep.support)
+    tqry = jax.tree.map(jnp.asarray, test_ep.query)
     out = {}
     for strat in ["centralized", "dif", "noncoop"]:
         combine = {"dif": "dense", "centralized": "centralized",
@@ -161,33 +166,30 @@ def bench_fig3_fewshot_classification(quick: bool):
         step = jax.jit(make_meta_step(model.loss_fn, mcfg))
         us = None
         accs = []
-        for i in range(steps):
-            sup, qry = sampler.sample_agents(6, 2)
-            t0 = time.perf_counter()
-            state, m = step(state, jax.tree.map(jnp.asarray, sup),
-                            jax.tree.map(jnp.asarray, qry))
-            if i == steps - 1:
-                jax.block_until_ready(m["loss"])
-                us = (time.perf_counter() - t0) * 1e6
-            if i % max(1, steps // 5) == 0 or i == steps - 1:
-                (tsx, tsy), (tqx, tqy) = sampler.sample(50, split="test",
-                                                        seed=4242)
-                c = diffusion.centroid(state.params)
-                accs_k = []
-                agents = range(6) if strat == "noncoop" else [None]
-                for k in agents:
-                    p = c if k is None else jax.tree.map(lambda x: x[k],
-                                                         state.params)
-                    def adapted_acc(sx_, sy_, qx_, qy_):
-                        g = jax.grad(model.loss_fn)(p, (sx_, sy_))
-                        pa = jax.tree.map(lambda a, b: a - cfg.inner_lr * b,
-                                          p, g)
-                        return model.accuracy(pa, (qx_, qy_))
-                    acc = jnp.mean(jax.vmap(adapted_acc)(
-                        jnp.asarray(tsx), jnp.asarray(tsy),
-                        jnp.asarray(tqx), jnp.asarray(tqy)))
-                    accs_k.append(float(acc))
-                accs.append((i, float(np.mean(accs_k))))
+        with MetaBatchPipeline(source, depth=2, prepare=_DEVICE_EP) as pipe:
+            for i in range(steps):
+                sup, qry = next(pipe)
+                t0 = time.perf_counter()
+                state, m = step(state, sup, qry)
+                if i == steps - 1:
+                    jax.block_until_ready(m["loss"])
+                    us = (time.perf_counter() - t0) * 1e6
+                if i % max(1, steps // 5) == 0 or i == steps - 1:
+                    c = diffusion.centroid(state.params)
+                    accs_k = []
+                    agents = range(6) if strat == "noncoop" else [None]
+                    for k in agents:
+                        p = c if k is None else jax.tree.map(lambda x: x[k],
+                                                             state.params)
+                        def adapted_acc(sx_, sy_, qx_, qy_):
+                            g = jax.grad(model.loss_fn)(p, (sx_, sy_))
+                            pa = jax.tree.map(
+                                lambda a, b: a - cfg.inner_lr * b, p, g)
+                            return model.accuracy(pa, (qx_, qy_))
+                        acc = jnp.mean(jax.vmap(adapted_acc)(
+                            tsup[0], tsup[1], tqry[0], tqry[1]))
+                        accs_k.append(float(acc))
+                    accs.append((i, float(np.mean(accs_k))))
         out[strat] = accs
         emit(f"fig3_fewshot_{strat}", us, f"final_test_acc={accs[-1][1]:.4f}")
     emit("fig3_summary", 0.0,
@@ -208,13 +210,13 @@ def bench_thm1_agreement(quick: bool):
         state = init_state(jax.random.key(1), model.init, mcfg,
                            identical_init=False)
         step = jax.jit(make_meta_step(model.loss_fn, mcfg))
-        dists = agent_sine_distributions(6)
+        source = SineTaskSource(K=6, tasks_per_agent=3, shots=10)
         ds = [float(diffusion.disagreement(state.params))]
-        for i in range(80 if quick else 300):
-            sup, qry = stacked_agent_batch(dists, 3, 10)
-            state, m = step(state, jax.tree.map(jnp.asarray, sup),
-                            jax.tree.map(jnp.asarray, qry))
-            ds.append(float(m["disagreement"]))
+        with MetaBatchPipeline(source, depth=2, prepare=_DEVICE_EP) as pipe:
+            for i in range(80 if quick else 300):
+                sup, qry = next(pipe)
+                state, m = step(state, sup, qry)
+                ds.append(float(m["disagreement"]))
         rows[f"mu={mu}"] = ds
         plateau = float(np.mean(ds[-20:]))
         emit(f"thm1_agreement_mu{mu}", 0.0,
@@ -232,7 +234,7 @@ def bench_thm2_stationarity(quick: bool):
     from repro.core import maml
     cfg = get_config("sine_mlp")
     model = SineMLP(cfg)
-    dists = agent_sine_distributions(6)
+    source = SineTaskSource(K=6, tasks_per_agent=5, shots=10)
     out = {}
     for mu in [2e-3, 5e-4]:
         mcfg = MetaConfig(num_agents=6, tasks_per_agent=5, inner_lr=0.01,
@@ -253,14 +255,13 @@ def bench_thm2_stationarity(quick: bool):
             return sum(jnp.sum(x ** 2) for x in jax.tree.leaves(g_mean))
 
         norms = []
-        for i in range(100 if quick else 400):
-            sup, qry = stacked_agent_batch(dists, 5, 10)
-            sup = jax.tree.map(jnp.asarray, sup)
-            qry = jax.tree.map(jnp.asarray, qry)
-            state, _ = step(state, sup, qry)
-            if i % 20 == 0:
-                c = diffusion.centroid(state.params)
-                norms.append(float(grad_norm_sq(c, sup, qry)))
+        with MetaBatchPipeline(source, depth=2, prepare=_DEVICE_EP) as pipe:
+            for i in range(100 if quick else 400):
+                sup, qry = next(pipe)
+                state, _ = step(state, sup, qry)
+                if i % 20 == 0:
+                    c = diffusion.centroid(state.params)
+                    norms.append(float(grad_norm_sq(c, sup, qry)))
         out[f"mu={mu}"] = norms
         emit(f"thm2_stationarity_mu{mu}", 0.0,
              f"grad_norm_sq_final={norms[-1]:.3e};initial={norms[0]:.3e}")
@@ -348,6 +349,150 @@ def bench_kernels(quick: bool):
     emit("kernel_ssd_scan", us, f"allclose_err={err:.2e};L={L}")
 
 
+class _LoopLMSource:
+    """Legacy python-triple-loop LM sampler adapted to the TaskSource
+    surface — the pre-vectorization baseline the pipeline rows measure
+    against (also a stand-in for host-bound real-corpus sources)."""
+
+    def __init__(self, sampler, K, T, tb):
+        self.sampler = sampler
+        self.K, self.tasks_per_agent, self.task_batch = K, T, tb
+        self.n_domains = sampler.n_domains
+        self.heterogeneity = "domain-shards(loop)"
+
+    def sample(self, step):
+        sup, qry = self.sampler.sample_agents(
+            self.K, self.tasks_per_agent, self.task_batch, step=step)
+        return Episode(sup, qry, step=step)
+
+
+def bench_pipeline(quick: bool):
+    """Tentpole rows: (1) vectorized LM episode generation (one batched
+    Markov pass over all K·T·2·tb rows) vs the legacy per-task python
+    loop; (2) train-step wall time with synchronous sampling vs the
+    background prefetcher, for both the loop and vectorized sources —
+    overlap_recovered = fraction of the sync step time the pipeline wins
+    back by sampling episode i+1 while the device runs step i."""
+    from repro.configs.base import ArchConfig, INPUT_SHAPES, InputShape
+    from repro.data import LMTaskSampler, LMTaskSource
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch import steps as S
+
+    # Rich Markov domains (4096-bucket × 256-branch transition tables, 8
+    # tasks/agent) put episode generation squarely on the host critical
+    # path — the regime the pipeline exists for.  The legacy loop rebuilds
+    # every table per task; the vectorized source builds each once, caches
+    # it, and advances all rows of the step in one generator pass.
+    seq, gb = 256, 64
+    cfg = ArchConfig(name="lm-pipe-bench", arch_type="dense", num_layers=1,
+                     d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                     d_ff=64, vocab_size=256, meta_mode="fomaml",
+                     topology="ring", outer_optimizer="adam",
+                     dtype="float32", remat=False, attn_q_chunk=None,
+                     meta_tasks=8)
+    INPUT_SHAPES["lm_pipe_bench"] = InputShape("lm_pipe_bench", seq, gb,
+                                               "train")
+    try:
+        mesh = make_host_mesh(data=min(4, len(jax.devices())))
+        with mesh:
+            bundle = S.build_train(cfg, mesh, "lm_pipe_bench")
+            K, T, tb = bundle.K, bundle.T, bundle.tb
+            dom_kw = dict(n_domains=8 * max(1, K), branching=256,
+                          n_buckets=4096, seed=0)
+            vec = LMTaskSource(vocab_size=cfg.padded_vocab, seq_len=seq,
+                               K=K, tasks_per_agent=T, task_batch=tb,
+                               **dom_kw)
+            loop = _LoopLMSource(
+                LMTaskSampler(cfg.padded_vocab, seq, **dom_kw), K, T, tb)
+
+            # --- (1) episode generation: vectorized vs python loop -------
+            reps = 3 if quick else 10
+            vec.sample(0); loop.sample(0)            # warm table caches
+            t0 = time.perf_counter()
+            for i in range(reps):
+                vec.sample(i)
+            vec_s = (time.perf_counter() - t0) / reps
+            t0 = time.perf_counter()
+            for i in range(reps):
+                loop.sample(i)
+            loop_s = (time.perf_counter() - t0) / reps
+            emit("pipeline_lm_vectorized", vec_s * 1e6,
+                 f"speedup_vs_loop={loop_s / vec_s:.1f}x;"
+                 f"episodes_per_s={1.0 / vec_s:.1f};"
+                 f"rows={K * T * 2 * tb};seq={seq}")
+
+            # --- (2) sync vs prefetched trainer input --------------------
+            # Two readings per (source, depth):
+            #   wall  — end-to-end step wall time (the loop reads the loss
+            #           every step, as the production trainer does for
+            #           logging; without that read jax's async dispatch
+            #           hides sampling in BOTH modes);
+            #   stall — time the step loop spends blocked in next(pipe),
+            #           i.e. the input path's share of the critical path.
+            # The stall is the mechanism metric (prefetch drives it to ~0
+            # regardless of machine noise); the wall delta additionally
+            # depends on spare host cores, so alternating repetitions are
+            # taken and the MEDIAN reported (shared-vCPU clocks drift).
+            step = jax.jit(bundle.step_fn, donate_argnums=(0,))
+            n_steps = 5 if quick else 8
+            n_reps = 3 if quick else 5
+
+            def run(source, depth):
+                st = bundle.init_state(seed=0)
+                with bundle.make_pipeline(source, depth=depth) as pipe:
+                    for _ in range(3):               # compile + warm caches
+                        st, m = step(st, next(pipe))
+                    jax.block_until_ready(m["loss"])
+                    stall = 0.0
+                    t0 = time.perf_counter()
+                    for _ in range(n_steps):
+                        t1 = time.perf_counter()
+                        batch = next(pipe)
+                        stall += time.perf_counter() - t1
+                        st, m = step(st, batch)
+                        float(m["loss"])
+                    wall = time.perf_counter() - t0
+                    return wall / n_steps, stall / n_steps
+
+            run(vec, 0)                              # burn-in (first jit run
+            # of a fresh process is systematically slower on 2-core CI)
+
+            out = {"sample_us": {"vec": vec_s * 1e6, "loop": loop_s * 1e6},
+                   "loop": {"sync": [], "prefetch": []},
+                   "vec": {"sync": [], "prefetch": []}}
+            for _ in range(n_reps):
+                for label, source in [("loop", loop), ("vec", vec)]:
+                    out[label]["sync"].append(run(source, 0))
+                    out[label]["prefetch"].append(run(source, 2))
+            med = lambda xs, i: float(np.median([x[i] for x in xs]))
+            for label in ["loop", "vec"]:
+                raw = out[label]
+                out[label] = {
+                    "sync_us": med(raw["sync"], 0) * 1e6,
+                    "prefetch_us": med(raw["prefetch"], 0) * 1e6,
+                    "stall_sync_us": med(raw["sync"], 1) * 1e6,
+                    "stall_prefetch_us": med(raw["prefetch"], 1) * 1e6,
+                    "raw": raw,
+                }
+                o = out[label]
+                emit(f"pipeline_overlap_lm_{label}", o["prefetch_us"],
+                     f"sync_us={o['sync_us']:.0f};"
+                     f"overlap_recovered="
+                     f"{(o['sync_us'] - o['prefetch_us']) / o['sync_us']:.3f};"
+                     f"input_stall_sync_us={o['stall_sync_us']:.0f};"
+                     f"input_stall_prefetch_us={o['stall_prefetch_us']:.0f}")
+            emit("pipeline_summary", 0.0,
+                 "prefetch_faster_than_sync=%s;input_stall_hidden=%.3f;"
+                 "vectorized_speedup=%.1fx"
+                 % (out["loop"]["prefetch_us"] < out["loop"]["sync_us"],
+                    1.0 - out["loop"]["stall_prefetch_us"]
+                    / max(out["loop"]["stall_sync_us"], 1e-9),
+                    loop_s / vec_s),
+                 detail=out)
+    finally:
+        del INPUT_SHAPES["lm_pipe_bench"]
+
+
 def bench_meta_modes(quick: bool):
     """Exact MAML vs FOMAML vs Reptile on the sine benchmark (paper uses
     exact; the frontier configs use FOMAML — quantify the gap)."""
@@ -368,12 +513,13 @@ def bench_topology_ablation(quick: bool):
     steps = 120 if quick else 500
     cfg = get_config("sine_mlp")
     model = SineMLP(cfg)
-    evald = SineTaskDistribution(seed=999)
-    evaln = make_eval_fn(model.loss_fn, inner_lr=0.01, inner_steps=1)
-    (sx, sy), (qx, qy) = evald.sample_batch(200, 10)
-    sx, sy, qx, qy = map(jnp.asarray, (sx, sy, qx, qy))
-    out = {}
     K = 16
+    source = SineTaskSource(K=K, tasks_per_agent=3, shots=10, n_domains=64)
+    evaln = make_eval_fn(model.loss_fn, inner_lr=0.01, inner_steps=1)
+    ep = source.eval_sample(200, seed=999)
+    esup = jax.tree.map(jnp.asarray, ep.support)
+    eqry = jax.tree.map(jnp.asarray, ep.query)
+    out = {}
     for topo in ["full", "torus", "erdos", "ring", "star"]:
         A = topology.combination_matrix(K, topo)
         lam2 = topology.mixing_rate(A)
@@ -383,13 +529,12 @@ def bench_topology_ablation(quick: bool):
         state = init_state(jax.random.key(0), model.init, mcfg,
                            identical_init=False)
         step = jax.jit(make_meta_step(model.loss_fn, mcfg))
-        dists = agent_sine_distributions(K)
-        for i in range(steps):
-            sup, qry = stacked_agent_batch(dists, 3, 10)
-            state, m = step(state, jax.tree.map(jnp.asarray, sup),
-                            jax.tree.map(jnp.asarray, qry))
+        with MetaBatchPipeline(source, depth=2, prepare=_DEVICE_EP) as pipe:
+            for i in range(steps):
+                sup, qry = next(pipe)
+                state, m = step(state, sup, qry)
         c = diffusion.centroid(state.params)
-        loss = float(np.mean(np.asarray(evaln(c, (sx, sy), (qx, qy)))[:, 1]))
+        loss = float(np.mean(np.asarray(evaln(c, esup, eqry))[:, 1]))
         dis = float(m["disagreement"])
         deg = int((A[:, 0] > 0).sum() - 1) if topo != "erdos" else             int(np.mean((A > 0).sum(0) - 1))
         out[topo] = {"lambda2": lam2, "loss": loss, "disagreement": dis,
@@ -415,6 +560,7 @@ BENCHES = {
     "combine": bench_combine_strategies,
     "kernels": bench_kernels,
     "modes": bench_meta_modes,
+    "pipeline": bench_pipeline,
     "topology": bench_topology_ablation,
 }
 

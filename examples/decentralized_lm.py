@@ -1,11 +1,14 @@
 """End-to-end driver: decentralized meta-training of a ~100M-parameter LM.
 
-Each agent holds a shard of synthetic text *domains* (data/lm_tasks.py);
-one Dif-MAML iteration adapts to sampled domains (inner step), takes the
-meta-gradient on held-out batches (outer), and diffuses launch models over
-a ring.  This is the production analogue of the paper's heterogeneous-task
-experiment, built on the same launch/steps.py bundles the dry-run lowers
-for the 256-chip mesh.
+Each agent holds a disjoint shard of synthetic text *domains*
+(``LMTaskSource`` — heterogeneous π_k, with one domain held out for the
+unseen-task eval); one Dif-MAML iteration adapts to sampled domains (inner
+step), takes the meta-gradient on held-out batches (outer), and diffuses
+launch models over a ring.  Episodes are generated in one vectorized pass
+and prefetched on a background thread (``bundle.make_pipeline``) so the
+host samples step i+1 while the device runs step i.  This is the
+production analogue of the paper's heterogeneous-task experiment, built on
+the same launch/steps.py bundles the dry-run lowers for the 256-chip mesh.
 
 Default geometry (~100M params: 12L × d512 × ffn2048 × 32k vocab):
   PYTHONPATH=src python examples/decentralized_lm.py --steps 300
@@ -13,7 +16,6 @@ CPU smoke (seconds):
   PYTHONPATH=src python examples/decentralized_lm.py --tiny --steps 4
 """
 import argparse
-import dataclasses
 import os
 import sys
 import time
@@ -27,7 +29,7 @@ import numpy as np
 from repro.checkpoint import save_checkpoint
 from repro.configs.base import ArchConfig, INPUT_SHAPES, InputShape
 from repro.core import diffusion
-from repro.data.lm_tasks import LMTaskSampler
+from repro.data import LMTaskSource
 from repro.launch.mesh import make_host_mesh
 from repro.launch import steps as S
 from repro.models.init import count_params
@@ -56,6 +58,7 @@ def main():
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--seq", type=int, default=None)
     ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--prefetch", type=int, default=2)
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
@@ -74,36 +77,42 @@ def main():
               f"T={bundle.T}×{bundle.tb} tasks, seq={seq}, batch={gb}")
         state = bundle.init_state(seed=0)
         step = jax.jit(bundle.step_fn, donate_argnums=(0,))
-        sampler = LMTaskSampler(cfg.padded_vocab, seq,
-                                n_domains=8 * max(1, bundle.K))
+        source = LMTaskSource(
+            vocab_size=cfg.padded_vocab, seq_len=seq, K=bundle.K,
+            tasks_per_agent=bundle.T, task_batch=bundle.tb,
+            n_domains=8 * max(1, bundle.K), holdout_domains=1, seed=0)
+        print(f"[lm] {source.heterogeneity}: {source.n_train_domains} train "
+              f"domains sharded across agents, {source.holdout_domains} "
+              f"held out for eval, prefetch depth {args.prefetch}")
         t0 = time.time()
-        for i in range(args.steps):
-            d = sampler.sample_task(i % sampler.n_domains, gb, seed=i)
-            batch = {k: jnp.asarray(v) for k, v in d.items()}
-            state, m = step(state, batch)
-            if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
-                print(f"step {int(state.step):4d} meta-loss "
-                      f"{float(m['loss']):.4f} disagreement "
-                      f"{float(m['disagreement']):.2e} "
-                      f"({time.time()-t0:.1f}s)")
+        with bundle.make_pipeline(source, depth=args.prefetch) as pipe:
+            for i in range(args.steps):
+                state, m = step(state, next(pipe))
+                if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+                    print(f"step {int(state.step):4d} meta-loss "
+                          f"{float(m['loss']):.4f} disagreement "
+                          f"{float(m['disagreement']):.2e} "
+                          f"({time.time()-t0:.1f}s)")
+        dt = time.time() - t0
+        print(f"[lm] {args.steps} steps in {dt:.1f}s "
+              f"({args.steps / dt:.2f} episodes/s end-to-end)")
         if args.ckpt_dir:
             save_checkpoint(args.ckpt_dir, int(state.step), state)
             print(f"[lm] checkpoint saved to {args.ckpt_dir}")
 
-        # post-training: adapt the centroid launch model to an UNSEEN domain
+        # post-training: adapt the centroid launch model to the UNSEEN
+        # held-out domain (support batch), evaluate on its query batch
         centroid = diffusion.centroid(state.params)
-        unseen = sampler.n_domains - 1
-        d = sampler.sample_task(unseen, gb, seed=10_001)
-        batch = {k: jnp.asarray(v) for k, v in d.items()}
-        before = float(model.loss_fn(centroid, batch))
-        g = jax.grad(model.loss_fn)(centroid, batch)
+        ev = source.eval_sample(1, seed=10_001, task_batch=gb)
+        support = {k: jnp.asarray(v[0]) for k, v in ev.support.items()}
+        query = {k: jnp.asarray(v[0]) for k, v in ev.query.items()}
+        before = float(model.loss_fn(centroid, query))
+        g = jax.grad(model.loss_fn)(centroid, support)
         adapted = jax.tree.map(lambda p, gg: p - cfg.inner_lr * gg,
                                centroid, g)
-        d2 = sampler.sample_task(unseen, gb, seed=10_002)
-        batch2 = {k: jnp.asarray(v) for k, v in d2.items()}
-        after = float(model.loss_fn(adapted, batch2))
-        print(f"[lm] unseen-domain loss: zero-shot {before:.4f} → "
-              f"one adaptation step {after:.4f}")
+        after = float(model.loss_fn(adapted, query))
+        print(f"[lm] unseen-domain {int(ev.domains[0])} loss: "
+              f"zero-shot {before:.4f} → one adaptation step {after:.4f}")
 
 
 if __name__ == "__main__":

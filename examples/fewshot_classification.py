@@ -1,8 +1,11 @@
 """Few-shot classification with Dif-MAML (paper §4.2 analogue).
 
 Synthetic Omniglot-surrogate episodes (the real archives are not available
-offline; see data/fewshot.py).  Compares the three strategies of the paper:
-centralized / Dif-MAML / non-cooperative, 5-way 1-shot.
+offline; see data/fewshot.py) through the unified ``FewShotTaskSource``:
+each agent owns a disjoint shard of the meta-train classes (heterogeneous
+π_k), and evaluation episodes come from the meta-test classes nobody
+trained on.  Compares the three strategies of the paper: centralized /
+Dif-MAML / non-cooperative, 5-way 1-shot.
 
   PYTHONPATH=src python examples/fewshot_classification.py [--steps 150]
 """
@@ -18,12 +21,13 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import MetaConfig, diffusion, init_state, make_meta_step
-from repro.data.fewshot import FewShotSampler
+from repro.data import Episode, FewShotTaskSource, MetaBatchPipeline
 from repro.models.simple import FewShotCNN
 
 
-def test_accuracy(model, params, sampler, inner_lr, n_tasks=50):
-    (sx, sy), (qx, qy) = sampler.sample(n_tasks, split="test", seed=777)
+def test_accuracy(model, params, source, inner_lr, n_tasks=50):
+    ep = source.eval_sample(n_tasks, seed=777)   # meta-test classes
+    (sx, sy), (qx, qy) = ep.support, ep.query
 
     def adapted_acc(sx_, sy_, qx_, qy_):
         g = jax.grad(model.loss_fn)(params, (sx_, sy_))
@@ -37,12 +41,17 @@ def test_accuracy(model, params, sampler, inner_lr, n_tasks=50):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--prefetch", type=int, default=2)
     args = ap.parse_args()
 
     cfg = get_config("omniglot_cnn")
-    sampler = FewShotSampler(n_classes=80, n_way=cfg.vocab_size,
-                             k_shot=1, n_query=5, seed=0)
-    model = FewShotCNN(cfg, image_hw=sampler.image_hw)
+    source = FewShotTaskSource(K=6, tasks_per_agent=2, n_classes=80,
+                               n_way=cfg.vocab_size, k_shot=1, n_query=5,
+                               seed=0)
+    model = FewShotCNN(cfg, image_hw=source.image_hw)
+    print(f"{source.heterogeneity}: {source.n_domains} meta-train classes "
+          f"sharded across K={source.K} agents, eval on "
+          f"{source.n_test_domains} meta-test classes")
 
     for strat, combine in [("centralized", "centralized"),
                            ("dif-maml", "dense"),
@@ -54,12 +63,13 @@ def main():
         state = init_state(jax.random.key(0), model.init, mcfg,
                            identical_init=True)
         step = jax.jit(make_meta_step(model.loss_fn, mcfg))
-        for i in range(args.steps):
-            sup, qry = sampler.sample_agents(6, 2)
-            state, m = step(state, jax.tree.map(jnp.asarray, sup),
-                            jax.tree.map(jnp.asarray, qry))
+        with MetaBatchPipeline(source, depth=args.prefetch,
+                               prepare=Episode.to_device) as pipe:
+            for i in range(args.steps):
+                sup, qry = next(pipe)
+                state, m = step(state, sup, qry)
         centroid = diffusion.centroid(state.params)
-        acc = test_accuracy(model, centroid, sampler, cfg.inner_lr)
+        acc = test_accuracy(model, centroid, source, cfg.inner_lr)
         print(f"{strat:12s} meta-train loss {float(m['loss']):.3f}   "
               f"5-way 1-shot test acc {acc:.3f}")
 

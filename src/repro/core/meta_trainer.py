@@ -140,12 +140,17 @@ def make_meta_step(
 def make_eval_fn(loss_fn: LossFn, inner_lr: float, inner_steps: int = 1):
     """Post-training evaluation (paper Fig. 2b/2c): adapt the centroid launch
     model on each eval task's support set for ``inner_steps`` gradient steps
-    and report query loss after *each* step (index 0 = zero-shot)."""
+    and report query loss after *each* step (index 0 = zero-shot).
+
+    Adaptation is ``maml.inner_adapt`` — the same code path the meta step
+    differentiates through — so eval semantics track any future inner-loop
+    change (freeze masks, remat, update rules) automatically.  Eval is
+    never differentiated, hence ``first_order=True`` (a free no-op here)."""
 
     def eval_one(params, support, query):
         def body(p, _):
-            g = jax.grad(loss_fn)(p, support)
-            p = jax.tree.map(lambda a, b: a - inner_lr * b, p, g)
+            p = maml.inner_adapt(loss_fn, p, support, alpha=inner_lr,
+                                 steps=1, first_order=True)
             return p, loss_fn(p, query)
 
         l0 = loss_fn(params, query)

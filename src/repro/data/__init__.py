@@ -1,6 +1,46 @@
-from repro.data.sine import SineTaskDistribution, agent_sine_distributions
-from repro.data.fewshot import FewShotSampler
-from repro.data.lm_tasks import LMTaskSampler
+"""Task-distribution substrates behind one `TaskSource` contract.
 
-__all__ = ["SineTaskDistribution", "agent_sine_distributions",
-           "FewShotSampler", "LMTaskSampler"]
+Every workload implements a single interface (repro.data.episodes):
+
+  ``source.sample(step) -> Episode``
+      One meta-iteration's data: ``support``/``query`` pytrees with
+      canonical ``(K, tasks_per_agent, task_batch, ...)`` leading axes and a
+      ``domains`` record of which domain each task was drawn from.  Pure
+      function of ``(source config, seed, step)`` — bit-identical across
+      hosts and across instances, so the prefetch pipeline may sample in
+      any order.
+  ``source.sources(K) -> [AgentStream, ...]``
+      Per-agent streams.  Each stream carries its pairwise-disjoint
+      ``domains`` shard (heterogeneous π_k, paper §4) assigned by
+      ``partition_domains`` — the one sharding mechanism all sources share.
+  ``source.eval_sample(n_tasks) -> Episode``
+      Task-leading (no agent axis) episodes over the full or held-out task
+      universe for post-training adaptation eval.
+  metadata: ``K``, ``tasks_per_agent``, ``n_domains``, ``heterogeneity``.
+
+Three conforming sources ship in this package — ``SineTaskSource``
+(amplitude bands), ``FewShotTaskSource`` (class shards), ``LMTaskSource``
+(Markov domain shards, vectorized generation) — plus
+``MetaBatchPipeline``, the background-thread prefetcher that samples and
+``device_put``s episode i+1 while the device runs step i.  A new workload
+is one new ``TaskSource``; the trainer, examples, and benchmarks need no
+changes.
+
+The pre-`TaskSource` module-level APIs (``SineTaskDistribution``,
+``FewShotSampler``, ``LMTaskSampler``) remain as thin building blocks the
+sources wrap.
+"""
+from repro.data.episodes import (AgentStream, DomainShardedSource, Episode,
+                                 TaskSource, partition_domains)
+from repro.data.pipeline import MetaBatchPipeline
+from repro.data.sine import (SineTaskDistribution, SineTaskSource,
+                             agent_sine_distributions)
+from repro.data.fewshot import FewShotSampler, FewShotTaskSource
+from repro.data.lm_tasks import LMTaskSampler, LMTaskSource
+
+__all__ = ["Episode", "TaskSource", "AgentStream", "DomainShardedSource",
+           "partition_domains", "MetaBatchPipeline",
+           "SineTaskDistribution", "SineTaskSource",
+           "agent_sine_distributions",
+           "FewShotSampler", "FewShotTaskSource",
+           "LMTaskSampler", "LMTaskSource"]

@@ -1,0 +1,192 @@
+"""Unified episode/task-stream substrate for every Dif-MAML workload.
+
+Dif-MAML's premise (paper §4) is that tasks live on *agents* with
+heterogeneous per-agent distributions π_k.  This module is the single place
+that premise is encoded: an :class:`Episode` is one meta-iteration's data
+with canonical ``(K, T, tb, ...)`` leading axes, a :class:`TaskSource` is
+anything that can produce them, and :func:`partition_domains` is the one
+mechanism that assigns each agent a pairwise-disjoint shard of the domain
+universe — sine amplitude bands, few-shot class shards, and LM Markov
+domains are three instances of it, not three bespoke loops.
+
+Determinism contract: ``sample(step)`` is a pure function of
+``(source config, seed, step)`` — two instances with the same fields
+produce bit-identical episodes on any host, in any order (the prefetch
+pipeline relies on the order-independence).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["Episode", "TaskSource", "AgentStream", "DomainShardedSource",
+           "partition_domains"]
+
+# Distinct salts keep the train / eval rng streams of one seed disjoint.
+_TRAIN_SALT = 0x5EED_0001
+_EVAL_SALT = 0x5EED_0002
+
+
+def episode_rng(salt: int, seed: int, step: int, agent: int = 0
+                ) -> np.random.Generator:
+    """Deterministic per-(seed, step, agent) generator (cross-host stable)."""
+    return np.random.default_rng([salt, seed, step, agent])
+
+
+def partition_domains(n_domains: int, K: int) -> list[np.ndarray]:
+    """Split ``range(n_domains)`` into K contiguous pairwise-disjoint shards
+    covering every domain (sizes differ by at most one).  This is the π_k
+    heterogeneity mechanism shared by all task sources."""
+    if K < 1:
+        raise ValueError(f"need at least one agent, got K={K}")
+    if n_domains < K:
+        raise ValueError(
+            f"cannot shard {n_domains} domains across K={K} agents: every "
+            f"agent needs a non-empty disjoint shard (need n_domains >= K)")
+    return list(np.array_split(np.arange(n_domains), K))
+
+
+@dataclasses.dataclass
+class Episode:
+    """One meta-iteration's data.
+
+    ``support``/``query`` are pytrees whose leaves share the canonical
+    leading axes ``(K, tasks_per_agent, task_batch, ...)`` — or, for eval
+    episodes (:meth:`TaskSource.eval_sample`), ``(n_tasks, ...)`` with no
+    agent axis.  ``domains`` records which domain(s) each task was drawn
+    from, shape ``(K, T)`` (or ``(K, T, way)`` for class-composed tasks);
+    it exists so heterogeneity is *testable*, not inferred.
+    """
+    support: PyTree
+    query: PyTree
+    domains: np.ndarray | None = None
+    step: int | None = None
+
+    def to_device(self) -> tuple[PyTree, PyTree]:
+        """``(support, query)`` transferred to the default device — the
+        standard ``prepare`` for pipelines feeding a host-mesh meta step
+        (``MetaBatchPipeline(src, prepare=Episode.to_device)``)."""
+        import jax
+        return jax.device_put((self.support, self.query))
+
+    def as_flat_batch(self) -> PyTree:
+        """Inverse of ``launch.steps.split_meta_batch``: concatenate support
+        and query along the task-batch axis and flatten ``(K, T, 2·tb)`` to
+        the global batch axis ``B = K·T·2·tb`` the jitted train step takes.
+        """
+        import jax
+
+        def leaf(s, q):
+            both = np.concatenate([np.asarray(s), np.asarray(q)], axis=2)
+            return both.reshape((-1,) + both.shape[3:])
+
+        return jax.tree.map(leaf, self.support, self.query)
+
+
+@runtime_checkable
+class TaskSource(Protocol):
+    """The contract every workload implements exactly once.
+
+    Metadata:
+      ``K``               number of agents the source is bound to
+      ``tasks_per_agent`` T, tasks per agent per meta-iteration
+      ``n_domains``       size of the discrete domain universe
+      ``heterogeneity``   short label of the π_k mechanism
+                          (e.g. 'amplitude-bands', 'class-shards')
+
+    Methods:
+      ``sources(K=None)``       per-agent streams (disjoint domain shards)
+      ``sample(step)``          -> Episode with (K, T, tb, ...) leading axes
+      ``eval_sample(n_tasks)``  -> Episode over the *full* (or held-out)
+                                   task universe, (n_tasks, ...) leading axes
+    """
+    K: int
+    tasks_per_agent: int
+    heterogeneity: str
+
+    @property
+    def n_domains(self) -> int: ...
+
+    def sources(self, K: int | None = None) -> list["AgentStream"]: ...
+
+    def sample(self, step: int) -> Episode: ...
+
+    def eval_sample(self, n_tasks: int, seed: int | None = None) -> Episode: ...
+
+
+@dataclasses.dataclass
+class AgentStream:
+    """Agent k's view of a :class:`TaskSource`: its disjoint domain shard
+    plus a per-agent episode stream (exactly the agent-k slice of the
+    source's stacked episode, so stream and stacked paths can never drift).
+    """
+    source: "DomainShardedSource"
+    agent: int
+    domains: np.ndarray
+
+    def sample(self, step: int) -> Episode:
+        import jax
+        ep = self.source.sample(step)
+        k = self.agent
+        take = lambda x: x[k]
+        return Episode(jax.tree.map(take, ep.support),
+                       jax.tree.map(take, ep.query),
+                       domains=None if ep.domains is None else ep.domains[k],
+                       step=step)
+
+
+class DomainShardedSource:
+    """Shared mechanics for domain-sharded task sources.
+
+    Subclasses provide ``K``, ``tasks_per_agent``, ``seed``, ``n_domains``
+    (optionally ``n_train_domains`` when some domains are held out for
+    eval) and either implement ``_agent_episode`` — one agent's
+    ``(support, query, domains)`` for one step — or override ``sample``
+    wholesale (the LM source does, to batch all agents into one vectorized
+    generator pass).
+    """
+
+    # --- sharding ----------------------------------------------------------
+
+    @property
+    def n_train_domains(self) -> int:
+        return self.n_domains
+
+    def shards(self) -> list[np.ndarray]:
+        return partition_domains(self.n_train_domains, self.K)
+
+    def sources(self, K: int | None = None) -> list[AgentStream]:
+        if K is not None and K != self.K:
+            raise ValueError(
+                f"source is bound to K={self.K} agents; rebuild it to "
+                f"stream for K={K}")
+        return [AgentStream(self, k, shard)
+                for k, shard in enumerate(self.shards())]
+
+    # --- rng ---------------------------------------------------------------
+
+    def _rng(self, step: int, agent: int = 0) -> np.random.Generator:
+        return episode_rng(_TRAIN_SALT, self.seed, step, agent)
+
+    def _eval_rng(self, seed: int | None) -> np.random.Generator:
+        return episode_rng(_EVAL_SALT, self.seed if seed is None else seed, 0)
+
+    # --- episode assembly --------------------------------------------------
+
+    def _agent_episode(self, k: int, domains: np.ndarray,
+                       rng: np.random.Generator
+                       ) -> tuple[PyTree, PyTree, np.ndarray]:
+        raise NotImplementedError
+
+    def sample(self, step: int) -> Episode:
+        import jax
+        parts = [self._agent_episode(k, shard, self._rng(step, k))
+                 for k, shard in enumerate(self.shards())]
+        sups, qrys, doms = zip(*parts)
+        stack = lambda *xs: np.stack(xs, axis=0)
+        return Episode(jax.tree.map(stack, *sups), jax.tree.map(stack, *qrys),
+                       domains=np.stack(doms, axis=0), step=step)

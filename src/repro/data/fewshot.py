@@ -15,6 +15,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.data.episodes import DomainShardedSource, Episode
+
 
 @dataclasses.dataclass
 class FewShotSampler:
@@ -45,6 +47,10 @@ class FewShotSampler:
 
     def _episode(self, classes: np.ndarray, rng: np.random.Generator):
         way = rng.choice(classes, size=self.n_way, replace=False)
+        return self.episode_from_classes(way, rng)
+
+    def episode_from_classes(self, way: np.ndarray, rng: np.random.Generator):
+        """Support/query for one episode over an explicit class selection."""
         n = self.k_shot + self.n_query
         protos = self._protos[way]  # (way, d)
         x = protos[:, None, :] + self.noise * rng.normal(
@@ -70,8 +76,81 @@ class FewShotSampler:
     def sample_agents(self, K: int, tasks_per_agent: int, split: str = "train"):
         """Leading (K, T, ...) axes, all agents sharing the class universe
         (the paper's classification setting: same tasks, limited per-agent
-        data)."""
+        data).  Legacy path — the heterogeneous-by-default view is
+        :class:`FewShotTaskSource`."""
         sup, qry = self.sample(K * tasks_per_agent, split)
         reshape = lambda a: a.reshape((K, tasks_per_agent) + a.shape[1:])
         return ((reshape(sup[0]), reshape(sup[1])),
                 (reshape(qry[0]), reshape(qry[1])))
+
+
+@dataclasses.dataclass
+class FewShotTaskSource(DomainShardedSource):
+    """`TaskSource` view of the few-shot benchmark: a domain = one meta-train
+    class, and ``partition_domains`` gives each agent a disjoint class shard
+    — agent k composes its N-way episodes only from its own classes
+    (heterogeneous π_k), while :meth:`eval_sample` draws from the meta-test
+    classes shared by nobody (meta-generalization stays measurable).
+    """
+    K: int = 6
+    tasks_per_agent: int = 2
+    n_classes: int = 200
+    image_hw: int = 14
+    n_way: int = 5
+    k_shot: int = 1
+    n_query: int = 5
+    noise: float = 0.15
+    train_fraction: float = 0.8
+    seed: int = 0
+    heterogeneity: str = "class-shards"
+
+    def __post_init__(self):
+        self.sampler = FewShotSampler(
+            n_classes=self.n_classes, image_hw=self.image_hw,
+            n_way=self.n_way, k_shot=self.k_shot, n_query=self.n_query,
+            noise=self.noise, seed=self.seed,
+            train_fraction=self.train_fraction)
+        per_agent = len(self.sampler._train_classes) // self.K
+        if per_agent < self.n_way:
+            raise ValueError(
+                f"K={self.K} agents over "
+                f"{len(self.sampler._train_classes)} meta-train classes "
+                f"leaves shards of ~{per_agent} classes — too few for "
+                f"{self.n_way}-way episodes (need n_classes*train_fraction "
+                f">= K*n_way = {self.K * self.n_way})")
+
+    @property
+    def dim(self) -> int:
+        return self.image_hw * self.image_hw
+
+    @property
+    def n_domains(self) -> int:
+        return len(self.sampler._train_classes)
+
+    @property
+    def n_test_domains(self) -> int:
+        return len(self.sampler._test_classes)
+
+    def _agent_episode(self, k, domains, rng):
+        ways, sup, qry = [], [], []
+        for _ in range(self.tasks_per_agent):
+            way = rng.choice(domains, size=self.n_way, replace=False)
+            s, q = self.sampler.episode_from_classes(way, rng)
+            ways.append(way); sup.append(s); qry.append(q)
+        stack = lambda *xs: np.stack(xs, axis=0)
+        import jax
+        return (jax.tree.map(stack, *sup), jax.tree.map(stack, *qry),
+                np.stack(ways, axis=0))
+
+    def eval_sample(self, n_tasks: int, seed: int | None = None) -> Episode:
+        rng = self._eval_rng(seed)
+        ways, sup, qry = [], [], []
+        for _ in range(n_tasks):
+            way = rng.choice(self.sampler._test_classes, size=self.n_way,
+                             replace=False)
+            s, q = self.sampler.episode_from_classes(way, rng)
+            ways.append(way); sup.append(s); qry.append(q)
+        stack = lambda *xs: np.stack(xs, axis=0)
+        import jax
+        return Episode(jax.tree.map(stack, *sup), jax.tree.map(stack, *qry),
+                       domains=np.stack(ways, axis=0))

@@ -12,6 +12,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.data.episodes import DomainShardedSource, Episode
+
 AMP_LO, AMP_HI = 0.1, 5.0
 PHASE_LO, PHASE_HI = 0.0, np.pi
 X_LO, X_HI = -5.0, 5.0
@@ -56,3 +58,47 @@ def stacked_agent_batch(dists, tasks_per_agent: int, shots: int):
         sup_x.append(sx); sup_y.append(sy); qry_x.append(qx); qry_y.append(qy)
     stack = lambda xs: np.stack(xs, axis=0)
     return ((stack(sup_x), stack(sup_y)), (stack(qry_x), stack(qry_y)))
+
+
+@dataclasses.dataclass
+class SineTaskSource(DomainShardedSource):
+    """`TaskSource` view of the sine benchmark: the amplitude interval
+    [0.1, 5.0] is discretized into ``n_domains`` bands and the bands are
+    sharded across agents via ``partition_domains`` — agent k's amplitude
+    range is the (contiguous) union of its bands, recovering the paper's
+    per-agent sub-intervals while recording which band each task came from.
+    A task = one band draw, amplitude uniform inside the band, phase
+    ~ U[0, π]; support/query are disjoint draws from the same sinusoid.
+    """
+    K: int = 6
+    tasks_per_agent: int = 5
+    shots: int = 10
+    n_domains: int = 60
+    seed: int = 0
+    heterogeneity: str = "amplitude-bands"
+
+    def __post_init__(self):
+        self._edges = np.linspace(AMP_LO, AMP_HI, self.n_domains + 1)
+
+    def _tasks(self, dom: np.ndarray, rng: np.random.Generator):
+        """(support, query) for one batch of band-indexed tasks."""
+        T, S = len(dom), self.shots
+        amp = rng.uniform(self._edges[dom], self._edges[dom + 1])[:, None, None]
+        phase = rng.uniform(PHASE_LO, PHASE_HI, size=(T, 1, 1))
+        xs = rng.uniform(X_LO, X_HI, size=(T, 2 * S, 1))
+        ys = (amp * np.sin(xs + phase)).astype(np.float32)
+        xs = xs.astype(np.float32)
+        return ((xs[:, :S], ys[:, :S]), (xs[:, S:], ys[:, S:]))
+
+    def _agent_episode(self, k, domains, rng):
+        dom = rng.choice(domains, size=self.tasks_per_agent)
+        support, query = self._tasks(dom, rng)
+        return support, query, dom
+
+    def eval_sample(self, n_tasks: int, seed: int | None = None) -> Episode:
+        """Eval tasks draw from the *full* amplitude interval (paper:
+        post-training adaptation to any sinusoid)."""
+        rng = self._eval_rng(seed)
+        dom = rng.integers(0, self.n_domains, size=n_tasks)
+        support, query = self._tasks(dom, rng)
+        return Episode(support, query, domains=dom)

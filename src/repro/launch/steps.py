@@ -40,10 +40,19 @@ def agent_count(cfg: ArchConfig, mesh: Mesh) -> int:
 
 def batch_geometry(cfg: ArchConfig, shape: InputShape, K: int
                    ) -> tuple[int, int]:
-    """(tasks_per_agent, task_batch): B = K · T · tb · 2 (support+query)."""
-    per_agent = shape.global_batch // K
-    assert per_agent >= 2, (shape.global_batch, K)
-    half = per_agent // 2
+    """(tasks_per_agent, task_batch): B = K · T · tb · 2 (support+query).
+
+    T starts at ``cfg.meta_tasks`` and falls back toward 1 until it divides
+    the per-agent half-batch; the global batch itself must factor exactly —
+    a remainder would silently vanish in the (K, T, 2·tb) fold."""
+    B = shape.global_batch
+    if K < 1 or B < 2 * K or B % (2 * K):
+        raise ValueError(
+            f"global_batch={B} cannot be split across K={K} agents: the "
+            f"meta step folds the batch as B = K·T·tb·2 (support+query), "
+            f"so global_batch must be a multiple of 2·K = {2 * max(K, 1)} "
+            f"(minimum {2 * max(K, 1)})")
+    half = B // K // 2
     T = cfg.meta_tasks
     while half % T:
         T -= 1
@@ -160,6 +169,41 @@ class TrainBundle:
     state_shardings: Any
     batch_shardings: Any
     init_state: Any               # () -> TrainState (materialized)
+
+    def make_pipeline(self, source, *, depth: int = 2, start_step: int = 0):
+        """Wrap a ``TaskSource`` bound to this bundle's (K, T, tb) geometry
+        in a :class:`~repro.data.pipeline.MetaBatchPipeline` yielding
+        device-ready global batches: the episode is flattened to the
+        ``(B, ...)`` layout ``step_fn`` folds back with
+        ``split_meta_batch``, modality stubs are appended, and the batch is
+        ``device_put`` onto ``batch_shardings`` on the prefetch thread —
+        host-side sampling and H2D overlap the jitted step."""
+        from repro.data.pipeline import MetaBatchPipeline
+        src_tb = getattr(source, "task_batch", self.tb)
+        if (source.K, source.tasks_per_agent, src_tb) != (self.K, self.T,
+                                                          self.tb):
+            raise ValueError(
+                f"source geometry (K={source.K}, T={source.tasks_per_agent}, "
+                f"tb={src_tb}) does not match the bundle's (K={self.K}, "
+                f"T={self.T}, tb={self.tb})")
+        cfg, dt = self.cfg, DTYPES[self.cfg.dtype]
+        B = self.K * self.T * self.tb * 2
+        extras = {}
+        if cfg.arch_type == "audio":
+            extras["encoder_frames"] = jnp.zeros(
+                (B, cfg.encoder_frames, cfg.d_model), dt)
+        if cfg.arch_type == "vlm":
+            extras["image_patches"] = jnp.zeros(
+                (B, cfg.num_patches, cfg.d_model), dt)
+
+        def prepare(ep):
+            batch = ep.as_flat_batch()
+            batch.update(extras)
+            return jax.device_put(
+                batch, {k: self.batch_shardings[k] for k in batch})
+
+        return MetaBatchPipeline(source, depth=depth, prepare=prepare,
+                                 start_step=start_step)
 
 
 def opt_state_axes(opt_name: str, params_axes: PyTree) -> PyTree:

@@ -10,40 +10,28 @@ reduced config + host mesh so the same entrypoint exercises end-to-end.
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
-import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
 from repro.configs import INPUT_SHAPES, get_config
 from repro.configs.base import InputShape
-from repro.data.lm_tasks import LMTaskSampler
+from repro.data.lm_tasks import LMTaskSource
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch import steps as S
 
 
-def make_batch(cfg, shape, sampler, step):
-    """Assemble the (B, S) global batch from per-agent task streams."""
-    B, seq = shape.global_batch, shape.seq_len
-    toks = np.zeros((B, seq), np.int32)
-    labs = np.zeros((B, seq), np.int32)
-    # one flat stream; split_meta_batch reshapes to (K, T, tb)
-    d = sampler.sample_task(domain_id=step % sampler.n_domains, batch=B,
-                            seed=step)
-    toks[:], labs[:] = d["tokens"], d["labels"]
-    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
-    if cfg.arch_type == "audio":
-        batch["encoder_frames"] = jnp.zeros(
-            (B, cfg.encoder_frames, cfg.d_model), S.DTYPES[cfg.dtype])
-    if cfg.arch_type == "vlm":
-        batch["image_patches"] = jnp.zeros(
-            (B, cfg.num_patches, cfg.d_model), S.DTYPES[cfg.dtype])
-    return batch
+def make_train_source(cfg, shape, K: int, T: int, tb: int,
+                      seed: int = 0) -> LMTaskSource:
+    """The production trainer's task stream: per-agent heterogeneous LM
+    domain shards (the paper's π_k).  Replaces the old ``make_batch``,
+    which sampled ONE domain for the entire global batch — every agent was
+    secretly training on the same distribution."""
+    return LMTaskSource(
+        vocab_size=cfg.padded_vocab, seq_len=shape.seq_len,
+        K=K, tasks_per_agent=T, task_batch=tb,
+        n_domains=max(8, 4 * K), seed=seed)
 
 
 def main() -> None:
@@ -60,6 +48,9 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=1)
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="meta-batch pipeline depth (0 = sample "
+                         "synchronously on the step loop)")
     ap.add_argument("--combine", default=None,
                     help="combine backend override: 'auto' or any "
                          "diffusion.combine_backends() name")
@@ -87,19 +78,22 @@ def main() -> None:
             state = restore_checkpoint(args.ckpt_dir, state)
             print(f"[train] restored step {int(state.step)}")
         step_fn = jax.jit(bundle.step_fn, donate_argnums=(0,))
-        sampler = LMTaskSampler(cfg.padded_vocab, shape.seq_len,
-                                n_domains=max(8, 4 * bundle.K))
+        source = make_train_source(cfg, shape, bundle.K, bundle.T, bundle.tb)
+        print(f"[train] task source: {source.n_train_domains} domains, "
+              f"{source.heterogeneity} over K={bundle.K} agents, "
+              f"prefetch depth {args.prefetch}")
         t0 = time.time()
-        for i in range(args.steps):
-            batch = make_batch(cfg, shape, sampler, int(state.step))
-            state, metrics = step_fn(state, batch)
-            if i % args.log_every == 0:
-                print(f"step {int(state.step):5d} "
-                      f"loss {float(metrics['loss']):.4f} "
-                      f"disagreement {float(metrics['disagreement']):.3e} "
-                      f"({time.time() - t0:.1f}s)")
-            if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
-                save_checkpoint(args.ckpt_dir, int(state.step), state)
+        with bundle.make_pipeline(source, depth=args.prefetch,
+                                  start_step=int(state.step)) as pipe:
+            for i in range(args.steps):
+                state, metrics = step_fn(state, next(pipe))
+                if i % args.log_every == 0:
+                    print(f"step {int(state.step):5d} "
+                          f"loss {float(metrics['loss']):.4f} "
+                          f"disagreement {float(metrics['disagreement']):.3e} "
+                          f"({time.time() - t0:.1f}s)")
+                if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+                    save_checkpoint(args.ckpt_dir, int(state.step), state)
         if args.ckpt_dir:
             save_checkpoint(args.ckpt_dir, int(state.step), state)
     print("[train] done")

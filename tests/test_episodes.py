@@ -1,0 +1,273 @@
+"""The unified TaskSource contract: canonical axes, per-agent domain
+disjointness (heterogeneous π_k), and cross-instance determinism."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import (Episode, FewShotTaskSource, LMTaskSource,
+                        SineTaskSource, TaskSource, partition_domains)
+
+
+def make_sources():
+    return [
+        SineTaskSource(K=4, tasks_per_agent=3, shots=5, n_domains=16, seed=3),
+        FewShotTaskSource(K=3, tasks_per_agent=2, n_classes=40, n_way=4,
+                          k_shot=1, n_query=3, seed=3),
+        LMTaskSource(vocab_size=256, seq_len=12, K=4, tasks_per_agent=2,
+                     task_batch=3, n_domains=12, holdout_domains=2, seed=3),
+    ]
+
+
+SOURCE_IDS = ["sine", "fewshot", "lm"]
+
+
+# ---------------------------------------------------------------------------
+# partition_domains: the one sharding mechanism
+# ---------------------------------------------------------------------------
+
+def test_partition_domains_disjoint_and_covering():
+    for n, K in [(16, 4), (13, 4), (5, 5), (64, 6)]:
+        shards = partition_domains(n, K)
+        assert len(shards) == K
+        all_ids = np.concatenate(shards)
+        assert sorted(all_ids.tolist()) == list(range(n))
+        for i in range(K):
+            for j in range(i + 1, K):
+                assert not set(shards[i]) & set(shards[j])
+
+
+def test_partition_domains_rejects_too_few_domains():
+    with pytest.raises(ValueError, match="n_domains >= K"):
+        partition_domains(3, 4)
+    with pytest.raises(ValueError, match="at least one agent"):
+        partition_domains(4, 0)
+
+
+# ---------------------------------------------------------------------------
+# Protocol conformance + canonical axes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("source", make_sources(), ids=SOURCE_IDS)
+def test_sources_conform_to_protocol(source):
+    assert isinstance(source, TaskSource)
+    assert source.n_domains >= source.K
+    assert isinstance(source.heterogeneity, str)
+
+
+@pytest.mark.parametrize("source", make_sources(), ids=SOURCE_IDS)
+def test_episode_canonical_leading_axes(source):
+    ep = source.sample(0)
+    K, T = source.K, source.tasks_per_agent
+    for leaf in jax.tree.leaves(ep.support) + jax.tree.leaves(ep.query):
+        assert leaf.shape[:2] == (K, T)
+    assert ep.domains.shape[:2] == (K, T)
+    assert ep.step == 0
+
+
+def test_episode_shapes_per_source():
+    sine, few, lm = make_sources()
+    ep = sine.sample(1)
+    assert ep.support[0].shape == (4, 3, 5, 1)       # (K, T, shots, 1)
+    ep = few.sample(1)
+    assert ep.support[0].shape == (3, 2, 4, few.dim)  # (K, T, way·shot, d)
+    assert ep.query[0].shape == (3, 2, 12, few.dim)   # way·n_query rows
+    ep = lm.sample(1)
+    assert ep.support["tokens"].shape == (4, 2, 3, 12)
+    assert ep.query["labels"].shape == (4, 2, 3, 12)
+    assert ep.support["tokens"].max() < 256
+    # labels are next-token shifted within each generated sequence
+    np.testing.assert_array_equal(ep.support["tokens"][..., 1:],
+                                  ep.support["labels"][..., :-1])
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneity: pairwise-disjoint per-agent domain shards
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("source", make_sources(), ids=SOURCE_IDS)
+def test_agent_streams_have_disjoint_shards(source):
+    streams = source.sources()
+    assert len(streams) == source.K
+    for i in range(source.K):
+        for j in range(i + 1, source.K):
+            assert not set(streams[i].domains) & set(streams[j].domains), \
+                f"agents {i} and {j} share domains"
+    covered = sorted(np.concatenate([s.domains for s in streams]).tolist())
+    n_train = getattr(source, "n_train_domains", source.n_domains)
+    assert covered == list(range(n_train))
+
+
+@pytest.mark.parametrize("source", make_sources(), ids=SOURCE_IDS)
+def test_episode_domains_drawn_from_own_shard(source):
+    streams = source.sources()
+    for step in range(3):
+        ep = source.sample(step)
+        for k, stream in enumerate(streams):
+            drawn = set(np.asarray(ep.domains[k]).reshape(-1).tolist())
+            assert drawn <= set(stream.domains.tolist()), \
+                f"agent {k} drew outside its shard at step {step}"
+
+
+@pytest.mark.parametrize("source", make_sources(), ids=SOURCE_IDS)
+def test_agent_stream_sample_is_stacked_slice(source):
+    ep = source.sample(5)
+    for k, stream in enumerate(source.sources()):
+        sk = stream.sample(5)
+        for a, b in zip(jax.tree.leaves(sk.support),
+                        jax.tree.leaves(ep.support)):
+            np.testing.assert_array_equal(a, b[k])
+        np.testing.assert_array_equal(sk.domains, ep.domains[k])
+
+
+def test_sources_rejects_mismatched_K():
+    src = SineTaskSource(K=4, n_domains=16)
+    with pytest.raises(ValueError, match="bound to K=4"):
+        src.sources(K=6)
+
+
+# ---------------------------------------------------------------------------
+# Determinism: same seed ⇒ bit-identical episodes across instances
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("source", make_sources(), ids=SOURCE_IDS)
+def test_bit_identical_across_instances(source):
+    clone = dataclasses.replace(source)
+    for step in (0, 7):
+        a, b = source.sample(step), clone.sample(step)
+        for x, y in zip(jax.tree.leaves((a.support, a.query)),
+                        jax.tree.leaves((b.support, b.query))):
+            np.testing.assert_array_equal(x, y)
+        np.testing.assert_array_equal(a.domains, b.domains)
+    ea, eb = source.eval_sample(4, seed=11), clone.eval_sample(4, seed=11)
+    for x, y in zip(jax.tree.leaves(ea.support), jax.tree.leaves(eb.support)):
+        np.testing.assert_array_equal(x, y)
+
+
+@pytest.mark.parametrize("source", make_sources(), ids=SOURCE_IDS)
+def test_steps_differ(source):
+    a, b = source.sample(0), source.sample(1)
+    assert any(not np.array_equal(x, y)
+               for x, y in zip(jax.tree.leaves(a.support),
+                               jax.tree.leaves(b.support)))
+
+
+def test_seed_changes_episodes():
+    a = LMTaskSource(vocab_size=256, seq_len=12, K=2, tasks_per_agent=2,
+                     task_batch=2, n_domains=8, seed=0).sample(0)
+    b = LMTaskSource(vocab_size=256, seq_len=12, K=2, tasks_per_agent=2,
+                     task_batch=2, n_domains=8, seed=1).sample(0)
+    assert not np.array_equal(a.support["tokens"], b.support["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Eval episodes: full / held-out universe, task-leading axes
+# ---------------------------------------------------------------------------
+
+def test_sine_eval_spans_full_range():
+    src = SineTaskSource(K=4, tasks_per_agent=3, shots=5, n_domains=16,
+                         seed=0)
+    ev = src.eval_sample(200, seed=1)
+    assert ev.support[0].shape == (200, 5, 1)
+    # eval draws bands beyond any single agent's shard
+    shard0 = set(src.sources()[0].domains.tolist())
+    assert not set(ev.domains.tolist()) <= shard0
+
+
+def test_fewshot_eval_uses_meta_test_classes():
+    src = FewShotTaskSource(K=3, tasks_per_agent=2, n_classes=40, n_way=4,
+                            k_shot=1, n_query=3, seed=0)
+    ev = src.eval_sample(8, seed=2)
+    test_classes = set(src.sampler._test_classes.tolist())
+    assert set(ev.domains.reshape(-1).tolist()) <= test_classes
+
+
+def test_lm_eval_uses_held_out_domains():
+    src = LMTaskSource(vocab_size=256, seq_len=12, K=4, tasks_per_agent=2,
+                       task_batch=3, n_domains=12, holdout_domains=2, seed=3)
+    ev = src.eval_sample(16, seed=5, task_batch=4)
+    assert ev.support["tokens"].shape == (16, 4, 12)
+    assert set(ev.domains.tolist()) <= {10, 11}       # the held-out tail
+    # no train shard ever contains a held-out domain
+    for stream in src.sources():
+        assert not set(stream.domains) & {10, 11}
+
+
+def test_fewshot_source_rejects_shards_too_small_for_way():
+    with pytest.raises(ValueError, match="too few"):
+        FewShotTaskSource(K=8, n_classes=40, n_way=5, train_fraction=0.8)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized LM generation matches the domain Markov structure
+# ---------------------------------------------------------------------------
+
+def test_lm_vectorized_respects_domain_tables():
+    src = LMTaskSource(vocab_size=64, seq_len=10, K=2, tasks_per_agent=2,
+                       task_batch=2, n_domains=4, seed=9)
+    ep = src.sample(0)
+    tables = src._tables()
+    toks = np.concatenate([ep.support["tokens"], ep.query["tokens"]], axis=2)
+    labs = np.concatenate([ep.support["labels"], ep.query["labels"]], axis=2)
+    seqs = np.concatenate([toks, labs[..., -1:]], axis=-1)  # full chains
+    for k in range(2):
+        for t in range(2):
+            dom = int(ep.domains[k, t])
+            allowed = tables[dom]                     # (buckets, branching)
+            for row in seqs[k, t]:
+                for a, b in zip(row[:-1], row[1:]):
+                    assert b in allowed[a % src.n_buckets]
+
+
+# ---------------------------------------------------------------------------
+# Flat-batch layout: Episode.as_flat_batch is split_meta_batch's inverse
+# ---------------------------------------------------------------------------
+
+def test_as_flat_batch_roundtrips_through_split_meta_batch():
+    from repro.configs import get_config
+    from repro.launch import steps as S
+    src = LMTaskSource(vocab_size=64, seq_len=6, K=2, tasks_per_agent=2,
+                       task_batch=2, n_domains=8, seed=0)
+    ep = src.sample(3)
+    flat = ep.as_flat_batch()
+    assert flat["tokens"].shape == (2 * 2 * 2 * 2, 6)
+    sup, qry = S.split_meta_batch(get_config("qwen2-1.5b"), flat,
+                                  K=2, T=2, tb=2)
+    np.testing.assert_array_equal(np.asarray(sup["tokens"]),
+                                  ep.support["tokens"])
+    np.testing.assert_array_equal(np.asarray(qry["labels"]),
+                                  ep.query["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Regression: the production trainer's source is heterogeneous (the old
+# make_batch path fed every agent the same single domain per step)
+# ---------------------------------------------------------------------------
+
+def test_train_source_gives_agents_disjoint_heterogeneous_domains():
+    from repro.configs import get_config
+    from repro.configs.base import InputShape
+    from repro.launch import steps as S
+    from repro.launch.train import make_train_source
+    cfg = get_config("qwen2-1.5b").reduced()
+    shape = InputShape("het_test", 16, 16, "train")
+    K = 4
+    T, tb = S.batch_geometry(cfg, shape, K)
+    source = make_train_source(cfg, shape, K, T, tb)
+    streams = source.sources()
+    for i in range(K):
+        for j in range(i + 1, K):
+            assert not set(streams[i].domains) & set(streams[j].domains)
+    # across steps, the union of drawn domains spans >1 domain and each
+    # agent stays inside its own shard — make_batch (one domain for the
+    # whole global batch, identical for all agents) fails both
+    drawn = [set() for _ in range(K)]
+    for step in range(8):
+        ep = source.sample(step)
+        for k in range(K):
+            drawn[k] |= set(np.asarray(ep.domains[k]).tolist())
+    for i in range(K):
+        for j in range(i + 1, K):
+            assert not drawn[i] & drawn[j]
+    assert sum(len(d) for d in drawn) > 1

@@ -34,6 +34,38 @@ def test_batch_geometry_divides_exactly():
             assert K * T * tb * 2 == shape.global_batch
 
 
+def test_batch_geometry_rejects_indivisible_batch():
+    """K ∤ B (or an odd per-agent batch) must fail loudly with the numbers,
+    not vanish rows in the (K, T, 2·tb) fold."""
+    import dataclasses
+    from repro.configs.base import InputShape
+    cfg = get_config("qwen2-7b")
+    with pytest.raises(ValueError) as ei:
+        S.batch_geometry(cfg, InputShape("x", 16, 10, "train"), K=4)
+    msg = str(ei.value)
+    assert "global_batch=10" in msg and "K=4" in msg and "8" in msg
+    # per-agent batch below the support+query minimum
+    with pytest.raises(ValueError, match="minimum 8"):
+        S.batch_geometry(cfg, InputShape("x", 16, 4, "train"), K=4)
+    # odd per-agent batch cannot split into support+query halves
+    with pytest.raises(ValueError):
+        S.batch_geometry(cfg, InputShape("x", 16, 12, "train"), K=4)
+
+
+def test_batch_geometry_T_falls_back():
+    """T retreats from cfg.meta_tasks toward 1 until it divides the
+    per-agent half batch."""
+    import dataclasses
+    from repro.configs.base import InputShape
+    cfg = dataclasses.replace(get_config("qwen2-7b"), meta_tasks=4)
+    # half = 6: 6 % 4 != 0, 6 % 3 == 0 -> T=3, tb=2
+    assert S.batch_geometry(cfg, InputShape("x", 16, 24, "train"), K=2) == (3, 2)
+    # half = 5: falls all the way back to T=1, tb=5
+    assert S.batch_geometry(cfg, InputShape("x", 16, 20, "train"), K=2) == (1, 5)
+    # exact fit keeps meta_tasks
+    assert S.batch_geometry(cfg, InputShape("x", 16, 16, "train"), K=2) == (4, 1)
+
+
 def test_split_meta_batch_layout():
     cfg = get_config("qwen2-7b")
     B, Sq = 32, 8

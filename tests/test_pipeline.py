@@ -1,0 +1,140 @@
+"""MetaBatchPipeline: prefetch == sync, ordering, lifecycle, errors, and
+the TrainBundle.make_pipeline integration."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import Episode, LMTaskSource, MetaBatchPipeline, SineTaskSource
+
+
+def _lm_source(**kw):
+    args = dict(vocab_size=128, seq_len=8, K=2, tasks_per_agent=2,
+                task_batch=2, n_domains=8, seed=0)
+    args.update(kw)
+    return LMTaskSource(**args)
+
+
+def test_prefetch_yields_same_sequence_as_sync():
+    src = _lm_source()
+    with MetaBatchPipeline(src, depth=3) as pre:
+        fetched = [next(pre) for _ in range(6)]
+    sync = MetaBatchPipeline(src, depth=0)
+    for a, b in zip(fetched, (next(sync) for _ in range(6))):
+        np.testing.assert_array_equal(a.support["tokens"],
+                                      b.support["tokens"])
+        np.testing.assert_array_equal(a.query["labels"], b.query["labels"])
+
+
+def test_pipeline_order_and_start_step():
+    src = _lm_source()
+    with MetaBatchPipeline(src, depth=2, start_step=10,
+                           prepare=lambda ep: ep.step) as pipe:
+        assert [next(pipe) for _ in range(4)] == [10, 11, 12, 13]
+        assert pipe.step == 14
+    sync = MetaBatchPipeline(src, depth=0, start_step=3,
+                             prepare=lambda ep: ep.step)
+    assert next(sync) == 3
+
+
+def test_pipeline_prepare_runs_on_producer():
+    src = SineTaskSource(K=2, tasks_per_agent=2, shots=3, n_domains=8)
+    prepare = lambda ep: jax.device_put((ep.support, ep.query))
+    with MetaBatchPipeline(src, depth=2, prepare=prepare) as pipe:
+        support, query = next(pipe)
+        assert isinstance(support[0], jax.Array)
+        assert support[0].shape == (2, 2, 3, 1)
+
+
+def test_pipeline_worker_error_propagates():
+    class Boom:
+        K, tasks_per_agent = 1, 1
+
+        def sample(self, step):
+            if step >= 2:
+                raise RuntimeError("synthetic sampler failure")
+            return Episode({"x": np.zeros((1, 1, 1))},
+                           {"x": np.zeros((1, 1, 1))}, step=step)
+
+    with MetaBatchPipeline(Boom(), depth=2) as pipe:
+        next(pipe); next(pipe)
+        with pytest.raises(RuntimeError, match="prefetch worker failed"):
+            next(pipe)
+
+
+def test_pipeline_stop_joins_worker():
+    pipe = MetaBatchPipeline(_lm_source(), depth=2)
+    next(pipe)
+    thread = pipe._thread
+    pipe.stop()
+    assert thread is not None and not thread.is_alive()
+    pipe.stop()                                  # idempotent
+    with pytest.raises(StopIteration):           # drained, not a hang
+        next(pipe)
+
+
+def test_pipeline_is_iterator():
+    sync = MetaBatchPipeline(_lm_source(), depth=0)
+    steps = [ep.step for ep, _ in zip(sync, range(3))]
+    assert steps == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# TrainBundle.make_pipeline: episodes reach the jitted step pre-sharded
+# ---------------------------------------------------------------------------
+
+def test_bundle_make_pipeline_end_to_end():
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.configs.base import InputShape
+    from repro.launch import steps as S
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.train import make_train_source
+    cfg = get_config("qwen2-1.5b").reduced()
+    INPUT_SHAPES["pipe_test"] = InputShape("pipe_test", 16, 8, "train")
+    try:
+        mesh = make_host_mesh()
+        with mesh:
+            bundle = S.build_train(cfg, mesh, "pipe_test")
+            source = make_train_source(cfg, INPUT_SHAPES["pipe_test"],
+                                       bundle.K, bundle.T, bundle.tb)
+            state = bundle.init_state(seed=0)
+            step = jax.jit(bundle.step_fn)
+            with bundle.make_pipeline(source, depth=2) as pipe:
+                for _ in range(2):
+                    batch = next(pipe)
+                    assert batch["tokens"].shape == (8, 16)
+                    assert isinstance(batch["tokens"], jax.Array)
+                    state, metrics = step(state, batch)
+            assert bool(jnp.isfinite(metrics["loss"]))
+            assert int(state.step) == 2
+    finally:
+        del INPUT_SHAPES["pipe_test"]
+
+
+def test_bundle_make_pipeline_rejects_geometry_mismatch():
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.configs.base import InputShape
+    from repro.launch import steps as S
+    from repro.launch.mesh import make_host_mesh
+    cfg = get_config("qwen2-1.5b").reduced()
+    INPUT_SHAPES["pipe_geo"] = InputShape("pipe_geo", 16, 8, "train")
+    try:
+        mesh = make_host_mesh()
+        with mesh:
+            bundle = S.build_train(cfg, mesh, "pipe_geo")
+            bad = LMTaskSource(vocab_size=cfg.padded_vocab, seq_len=16,
+                               K=bundle.K + 1, tasks_per_agent=bundle.T,
+                               task_batch=bundle.tb,
+                               n_domains=8 * (bundle.K + 1))
+            with pytest.raises(ValueError, match="does not match"):
+                bundle.make_pipeline(bad)
+            bad_tb = LMTaskSource(vocab_size=cfg.padded_vocab, seq_len=16,
+                                  K=bundle.K, tasks_per_agent=bundle.T,
+                                  task_batch=bundle.tb + 1,
+                                  n_domains=8 * bundle.K)
+            with pytest.raises(ValueError, match="does not match"):
+                bundle.make_pipeline(bad_tb)
+    finally:
+        del INPUT_SHAPES["pipe_geo"]
