@@ -23,12 +23,9 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs.base import ArchConfig, INPUT_SHAPES, InputShape
-from repro.core import diffusion
 from repro.data import LMTaskSource
 from repro.launch.mesh import make_host_mesh
 from repro.launch import steps as S
@@ -100,19 +97,16 @@ def main():
             save_checkpoint(args.ckpt_dir, int(state.step), state)
             print(f"[lm] checkpoint saved to {args.ckpt_dir}")
 
-        # post-training: adapt the centroid launch model to the UNSEEN
-        # held-out domain (support batch), evaluate on its query batch
-        centroid = diffusion.centroid(state.params)
-        ev = source.eval_sample(1, seed=10_001, task_batch=gb)
-        support = {k: jnp.asarray(v[0]) for k, v in ev.support.items()}
-        query = {k: jnp.asarray(v[0]) for k, v in ev.query.items()}
-        before = float(model.loss_fn(centroid, query))
-        g = jax.grad(model.loss_fn)(centroid, support)
-        adapted = jax.tree.map(lambda p, gg: p - cfg.inner_lr * gg,
-                               centroid, g)
-        after = float(model.loss_fn(adapted, query))
-        print(f"[lm] unseen-domain {int(ev.domains[0])} loss: "
-              f"zero-shot {before:.4f} → one adaptation step {after:.4f}")
+        # post-training: the recurring-vs-unseen protocol through the same
+        # EvalHarness the trainer hook and the serve path use
+        harness = bundle.make_eval_harness(inner_steps=1)
+        report = harness.evaluate(state, source, n_tasks=1, seed=10_001)
+        for split, rep in report.splits.items():
+            c = rep.centroid_curve
+            print(f"[lm] {split} loss: zero-shot {c[0]:.4f} "
+                  f"→ one adaptation step {c[-1]:.4f}")
+        print(f"[lm] generalization gap (unseen − recurring, adapted): "
+              f"{report.generalization_gap:.4f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,37 @@
+"""CI gate for the trainer's JSONL run log.
+
+Asserts the log is well-formed and that the in-training EvalHarness hook
+actually ran: at least one ``kind=eval`` record carrying adaptation-loss
+curves for BOTH the recurring and the unseen split, plus a generalization
+gap.  Exits non-zero (with a reason) otherwise.
+
+  python scripts/check_run_log.py results/ci_train_eval.jsonl
+"""
+import json
+import sys
+
+
+def main(path: str) -> None:
+    with open(path) as f:
+        records = [json.loads(line) for line in f if line.strip()]
+    assert records, f"{path} is empty"
+    kinds = {r.get("kind") for r in records}
+    assert "train" in kinds, f"no train records in {path} (kinds: {kinds})"
+    evals = [r for r in records if r.get("kind") == "eval"]
+    assert evals, f"no eval records in {path} — was --eval-every set?"
+    for rec in evals:
+        splits = rec.get("splits", {})
+        missing = {"recurring", "unseen"} - set(splits)
+        assert not missing, f"eval record at step {rec.get('step')} " \
+                            f"missing splits: {missing}"
+        for name, s in splits.items():
+            curve = s.get("centroid_curve", [])
+            assert len(curve) >= 2, \
+                f"{name} curve too short (need zero-shot + >=1 step): {curve}"
+        assert "generalization_gap" in rec, "missing generalization_gap"
+    print(f"ok: {path} has {len(evals)} eval record(s) with both splits "
+          f"(last gap: {evals[-1]['generalization_gap']:.4f})")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1])

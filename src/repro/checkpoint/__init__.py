@@ -1,3 +1,5 @@
-from repro.checkpoint.io import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.io import (save_checkpoint, restore_checkpoint,
+                                 restore_centroid, latest_step)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "restore_centroid",
+           "latest_step"]

@@ -35,6 +35,15 @@ def _fmt(p) -> str:
     return f"x:{p}"
 
 
+def _decode_raw(arr: np.ndarray) -> np.ndarray:
+    """npz round-trips ml_dtypes arrays (bfloat16) as raw void bytes —
+    reinterpret them so arithmetic and casts work after load."""
+    if arr.dtype.kind == "V" and arr.dtype.itemsize == 2:
+        import ml_dtypes
+        return arr.view(ml_dtypes.bfloat16)
+    return arr
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
@@ -53,6 +62,41 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
+def restore_centroid(ckpt_dir: str, like_params: PyTree,
+                     step: int | None = None) -> PyTree:
+    """Restore the agent-**centroid** launch model from a TrainState
+    checkpoint: every ``params`` leaf is loaded and averaged over its
+    leading agent axis into the structure of single-agent ``like_params``
+    (arrays or ShapeDtypeStructs).  This is the serve path's entry point —
+    a checkpoint holds K per-agent models, serving wants the consensus one.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    # the params field's key-path prefix inside TrainState, derived from a
+    # probe so it tracks jax's key-path spelling
+    from repro.core.meta_trainer import TrainState
+    probe = jax.tree_util.tree_flatten_with_path(
+        TrainState(np.zeros(()), {"probe": np.zeros(())}, ()))[0]
+    prefix = next(_fmt(p[0][0]) for p in probe
+                  if getattr(p[0][-1], "key", None) == "probe")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like_params)
+    out = []
+    for path_keys, leaf in paths:
+        key = _SEP.join([prefix] + [_fmt(p) for p in path_keys])
+        arr = _decode_raw(data[key])
+        if arr.shape[1:] != tuple(leaf.shape):
+            raise ValueError(
+                f"agent-stacked shape mismatch for {key}: checkpoint "
+                f"{arr.shape} vs (K,) + {tuple(leaf.shape)}")
+        out.append(jax.numpy.asarray(
+            arr.astype(np.float32).mean(axis=0)).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def restore_checkpoint(ckpt_dir: str, like: PyTree, step: int | None = None,
                        shardings: PyTree | None = None) -> PyTree:
     """Restore into the structure of ``like`` (arrays or SDS).  If a
@@ -69,7 +113,7 @@ def restore_checkpoint(ckpt_dir: str, like: PyTree, step: int | None = None,
     out = []
     for (path_keys, leaf), shard in zip(paths, shard_leaves):
         key = _SEP.join(_fmt(p) for p in path_keys)
-        arr = data[key]
+        arr = _decode_raw(data[key])
         if arr.shape != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {leaf.shape}")

@@ -138,27 +138,14 @@ def make_meta_step(
 
 
 def make_eval_fn(loss_fn: LossFn, inner_lr: float, inner_steps: int = 1):
-    """Post-training evaluation (paper Fig. 2b/2c): adapt the centroid launch
-    model on each eval task's support set for ``inner_steps`` gradient steps
-    and report query loss after *each* step (index 0 = zero-shot).
+    """Compatibility wrapper over :class:`repro.eval.EvalHarness`.
 
-    Adaptation is ``maml.inner_adapt`` — the same code path the meta step
-    differentiates through — so eval semantics track any future inner-loop
-    change (freeze masks, remat, update rules) automatically.  Eval is
-    never differentiated, hence ``first_order=True`` (a free no-op here)."""
-
-    def eval_one(params, support, query):
-        def body(p, _):
-            p = maml.inner_adapt(loss_fn, p, support, alpha=inner_lr,
-                                 steps=1, first_order=True)
-            return p, loss_fn(p, query)
-
-        l0 = loss_fn(params, query)
-        _, losses = jax.lax.scan(body, params, None, length=inner_steps)
-        return jnp.concatenate([l0[None], losses])
-
-    def evaluate(params, support, query):
-        """support/query leading axis = eval tasks; returns (tasks, steps+1)."""
-        return jax.vmap(lambda s, q: eval_one(params, s, q))(support, query)
-
-    return evaluate
+    Returns ``evaluate(params, support, query) -> (tasks, steps+1)``:
+    adapt one launch model on each eval task's support set and report the
+    query loss after *each* inner step (index 0 = zero-shot), exactly
+    :meth:`EvalHarness.curves`.  New code should build the harness
+    directly — it adds the recurring-vs-unseen split protocol, per-agent
+    curves, and the generalization-gap report."""
+    from repro.eval.harness import EvalHarness
+    return EvalHarness(loss_fn, inner_lr=inner_lr,
+                       inner_steps=inner_steps).curves

@@ -13,9 +13,24 @@ Every workload implements a single interface (repro.data.episodes):
       Per-agent streams.  Each stream carries its pairwise-disjoint
       ``domains`` shard (heterogeneous π_k, paper §4) assigned by
       ``partition_domains`` — the one sharding mechanism all sources share.
-  ``source.eval_sample(n_tasks) -> Episode``
-      Task-leading (no agent axis) episodes over the full or held-out task
-      universe for post-training adaptation eval.
+  ``source.eval_sample(n_tasks, split=...) -> Episode``
+      Task-leading (no agent axis) episodes for adaptation eval.  The
+      ``split`` argument is the recurring-vs-unseen generalization contract
+      (Fallah et al. 2021), spelled identically on every source:
+        ``split='recurring'``  tasks from the *trained* domain universe
+                               (the union of all agent shards);
+        ``split='unseen'``     tasks from domains held out of every shard
+                               (sine: the held-out amplitude bands via
+                               ``holdout_domains``; few-shot: the meta-test
+                               classes; LM: ``holdout_domains``) — always
+                               disjoint from 'recurring';
+        ``split=None``         each source's legacy default universe
+                               (sine: full range, few-shot: meta-test, LM:
+                               held-out when configured, else full).
+      ``repro.eval.EvalHarness`` consumes this surface to report
+      per-inner-step adaptation curves and the generalization gap for any
+      ``TrainState`` — during training (``launch/train.py --eval-every``),
+      post-hoc (benchmarks), and at serve time (``launch/serve.py``).
   metadata: ``K``, ``tasks_per_agent``, ``n_domains``, ``heterogeneity``.
 
 Three conforming sources ship in this package — ``SineTaskSource``

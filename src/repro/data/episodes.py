@@ -24,7 +24,13 @@ import numpy as np
 PyTree = Any
 
 __all__ = ["Episode", "TaskSource", "AgentStream", "DomainShardedSource",
-           "partition_domains"]
+           "partition_domains", "EVAL_SPLITS"]
+
+# The recurring-vs-unseen eval contract (Fallah et al. 2021): 'recurring'
+# draws eval tasks from the domains the agents trained on, 'unseen' from the
+# held-out tail nobody's shard contains.  The generalization gap between the
+# two is the metric the EvalHarness reports.
+EVAL_SPLITS = ("recurring", "unseen")
 
 # Distinct salts keep the train / eval rng streams of one seed disjoint.
 _TRAIN_SALT = 0x5EED_0001
@@ -101,8 +107,13 @@ class TaskSource(Protocol):
     Methods:
       ``sources(K=None)``       per-agent streams (disjoint domain shards)
       ``sample(step)``          -> Episode with (K, T, tb, ...) leading axes
-      ``eval_sample(n_tasks)``  -> Episode over the *full* (or held-out)
-                                   task universe, (n_tasks, ...) leading axes
+      ``eval_sample(n_tasks, split=...)``
+                                -> Episode with (n_tasks, ...) leading axes.
+                                   ``split='recurring'`` draws from the
+                                   trained domain shards, ``split='unseen'``
+                                   from held-out domains (disjoint from every
+                                   agent's shard); ``split=None`` keeps each
+                                   source's legacy default universe.
     """
     K: int
     tasks_per_agent: int
@@ -115,7 +126,8 @@ class TaskSource(Protocol):
 
     def sample(self, step: int) -> Episode: ...
 
-    def eval_sample(self, n_tasks: int, seed: int | None = None) -> Episode: ...
+    def eval_sample(self, n_tasks: int, seed: int | None = None,
+                    split: str | None = None) -> Episode: ...
 
 
 @dataclasses.dataclass
@@ -158,6 +170,29 @@ class DomainShardedSource:
 
     def shards(self) -> list[np.ndarray]:
         return partition_domains(self.n_train_domains, self.K)
+
+    def eval_domain_pool(self, split: str | None) -> np.ndarray:
+        """Domain ids an eval episode of ``split`` may draw from.
+
+        'recurring' = the trained shards' union, 'unseen' = the held-out
+        tail (requires some domains held out), None/'full' = the whole
+        universe.  Sources whose unseen split is not a tail of the same
+        universe (e.g. few-shot meta-test classes) override this.
+        """
+        if split in (None, "full"):
+            return np.arange(self.n_domains)
+        if split == "recurring":
+            return np.arange(self.n_train_domains)
+        if split == "unseen":
+            if self.n_train_domains >= self.n_domains:
+                raise ValueError(
+                    f"{type(self).__name__} has no held-out domains for "
+                    f"split='unseen' (n_domains={self.n_domains}, all "
+                    f"trained); configure holdout_domains > 0")
+            return np.arange(self.n_train_domains, self.n_domains)
+        raise ValueError(
+            f"unknown eval split {split!r}: expected one of "
+            f"{EVAL_SPLITS + ('full', None)}")
 
     def sources(self, K: int | None = None) -> list[AgentStream]:
         if K is not None and K != self.K:

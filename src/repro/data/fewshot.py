@@ -131,6 +131,18 @@ class FewShotTaskSource(DomainShardedSource):
     def n_test_domains(self) -> int:
         return len(self.sampler._test_classes)
 
+    def eval_domain_pool(self, split):
+        """'recurring' = meta-train classes (the trained shards' union),
+        'unseen' = meta-test classes (shared by no agent), 'full' = both.
+        The default eval split is 'unseen' — the classic meta-test."""
+        if split == "recurring":
+            return self.sampler._train_classes
+        if split in (None, "unseen"):
+            return self.sampler._test_classes
+        if split == "full":
+            return np.arange(self.n_classes)
+        raise ValueError(f"unknown eval split {split!r}")
+
     def _agent_episode(self, k, domains, rng):
         ways, sup, qry = [], [], []
         for _ in range(self.tasks_per_agent):
@@ -142,12 +154,13 @@ class FewShotTaskSource(DomainShardedSource):
         return (jax.tree.map(stack, *sup), jax.tree.map(stack, *qry),
                 np.stack(ways, axis=0))
 
-    def eval_sample(self, n_tasks: int, seed: int | None = None) -> Episode:
+    def eval_sample(self, n_tasks: int, seed: int | None = None,
+                    split: str | None = None) -> Episode:
         rng = self._eval_rng(seed)
+        pool = self.eval_domain_pool(split)
         ways, sup, qry = [], [], []
         for _ in range(n_tasks):
-            way = rng.choice(self.sampler._test_classes, size=self.n_way,
-                             replace=False)
+            way = rng.choice(pool, size=self.n_way, replace=False)
             s, q = self.sampler.episode_from_classes(way, rng)
             ways.append(way); sup.append(s); qry.append(q)
         stack = lambda *xs: np.stack(xs, axis=0)

@@ -167,13 +167,17 @@ class LMTaskSource(DomainShardedSource):
                        domains=doms, step=step)
 
     def eval_sample(self, n_tasks: int, seed: int | None = None,
+                    split: str | None = None,
                     task_batch: int | None = None) -> Episode:
-        """Eval tasks: held-out domains when ``holdout_domains > 0`` (the
-        unseen-task split), otherwise the full universe."""
+        """Eval tasks: ``split=None`` keeps the legacy default — held-out
+        domains when ``holdout_domains > 0`` (the unseen-task split),
+        otherwise the full universe; 'recurring'/'unseen' select the
+        trained shards / held-out tail explicitly."""
         tb = self.task_batch if task_batch is None else task_batch
         rng = self._eval_rng(seed)
-        lo = self.n_train_domains if self.holdout_domains else 0
-        dom = rng.integers(lo, self.n_domains, size=n_tasks)
+        if split is None:
+            split = "unseen" if self.holdout_domains else "full"
+        dom = rng.choice(self.eval_domain_pool(split), size=n_tasks)
         rows = n_tasks * 2 * tb
         toks = self._generate(np.repeat(dom, 2 * tb),
                               rng.integers(0, self.vocab_size, size=rows),

@@ -69,16 +69,26 @@ class SineTaskSource(DomainShardedSource):
     per-agent sub-intervals while recording which band each task came from.
     A task = one band draw, amplitude uniform inside the band, phase
     ~ U[0, π]; support/query are disjoint draws from the same sinusoid.
+
+    ``holdout_domains`` reserves the top amplitude bands for the unseen
+    eval split: agents train on the first ``n_domains - holdout_domains``
+    bands and ``eval_sample(split='unseen')`` draws only from the held-out
+    tail (recurring-vs-unseen generalization, Fallah et al. 2021).
     """
     K: int = 6
     tasks_per_agent: int = 5
     shots: int = 10
     n_domains: int = 60
+    holdout_domains: int = 0
     seed: int = 0
     heterogeneity: str = "amplitude-bands"
 
     def __post_init__(self):
         self._edges = np.linspace(AMP_LO, AMP_HI, self.n_domains + 1)
+
+    @property
+    def n_train_domains(self) -> int:
+        return self.n_domains - self.holdout_domains
 
     def _tasks(self, dom: np.ndarray, rng: np.random.Generator):
         """(support, query) for one batch of band-indexed tasks."""
@@ -95,10 +105,12 @@ class SineTaskSource(DomainShardedSource):
         support, query = self._tasks(dom, rng)
         return support, query, dom
 
-    def eval_sample(self, n_tasks: int, seed: int | None = None) -> Episode:
-        """Eval tasks draw from the *full* amplitude interval (paper:
-        post-training adaptation to any sinusoid)."""
+    def eval_sample(self, n_tasks: int, seed: int | None = None,
+                    split: str | None = None) -> Episode:
+        """Eval tasks: ``split=None`` keeps the paper's protocol (the full
+        amplitude interval — adaptation to any sinusoid); 'recurring' draws
+        only trained bands, 'unseen' only the held-out tail."""
         rng = self._eval_rng(seed)
-        dom = rng.integers(0, self.n_domains, size=n_tasks)
+        dom = rng.choice(self.eval_domain_pool(split), size=n_tasks)
         support, query = self._tasks(dom, rng)
         return Episode(support, query, domains=dom)

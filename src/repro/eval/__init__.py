@@ -1,0 +1,11 @@
+"""Adaptation-at-evaluation-time: the shared engine behind the trainer's
+in-training eval hook, the post-hoc benchmarks, and serve-time adaptation.
+
+See :mod:`repro.eval.harness` for the :class:`EvalHarness` protocol
+(recurring-vs-unseen splits, centroid + per-agent curves, generalization
+gap).  ``repro.core.make_eval_fn`` remains as a thin compatibility wrapper
+over :meth:`EvalHarness.curves`.
+"""
+from repro.eval.harness import EvalHarness, EvalReport, SplitReport
+
+__all__ = ["EvalHarness", "EvalReport", "SplitReport"]

@@ -1,0 +1,183 @@
+"""The one adaptation-at-evaluation-time engine (paper Fig. 2b/2c).
+
+Every consumer that measures how well a launch model *adapts* — the
+trainer's in-training eval hook, the post-hoc benchmarks, and the serving
+path — goes through this module.  Adaptation itself is
+:func:`repro.core.maml.inner_adapt`, the same code path the meta step
+differentiates through, so eval semantics track any inner-loop change
+(freeze masks, remat, multi-step scan) automatically.
+
+Two layers:
+
+:class:`EvalHarness`
+    Bound to ``(loss_fn, inner_lr, inner_steps)``.  ``curves`` is the
+    jitted batched adapt-and-measure primitive: per-inner-step query-loss
+    curves over a batch of eval tasks (index 0 = zero-shot).  ``evaluate``
+    is the full recurring-vs-unseen protocol: draw ``eval_sample``
+    episodes from both splits of a :class:`~repro.data.episodes.TaskSource`,
+    measure against both the **centroid** and the **per-agent** parameters
+    of a ``TrainState``, and report the generalization gap plus the
+    network disagreement at eval time.
+
+:class:`EvalReport` / :class:`SplitReport`
+    Plain-data results with a JSON-ready ``to_record()`` for the trainer's
+    JSONL run log.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import diffusion, maml
+from repro.data.episodes import EVAL_SPLITS, Episode
+
+PyTree = Any
+LossFn = Callable[[PyTree, Any], jax.Array]
+
+__all__ = ["EvalHarness", "EvalReport", "SplitReport"]
+
+
+@dataclasses.dataclass
+class SplitReport:
+    """Adaptation-loss curves for one eval split, averaged over tasks.
+    Curves have ``inner_steps + 1`` entries; index 0 is zero-shot."""
+    split: str
+    n_tasks: int
+    centroid_curve: np.ndarray        # (steps+1,) centroid launch model
+    agent_curve: np.ndarray | None    # (steps+1,) mean over per-agent models
+
+    def to_record(self) -> dict:
+        rec = {"n_tasks": self.n_tasks,
+               "centroid_curve": [float(x) for x in self.centroid_curve]}
+        if self.agent_curve is not None:
+            rec["agent_curve"] = [float(x) for x in self.agent_curve]
+        return rec
+
+
+@dataclasses.dataclass
+class EvalReport:
+    """One EvalHarness pass: per-split adaptation curves + scalars."""
+    step: int | None
+    splits: dict[str, SplitReport]
+    disagreement: float | None = None
+
+    @property
+    def generalization_gap(self) -> float | None:
+        """Final-adapted unseen loss minus recurring loss (centroid): how
+        much worse the launch model adapts to tasks no agent trained on."""
+        if not {"recurring", "unseen"} <= set(self.splits):
+            return None
+        return (float(self.splits["unseen"].centroid_curve[-1])
+                - float(self.splits["recurring"].centroid_curve[-1]))
+
+    def to_record(self) -> dict:
+        rec: dict[str, Any] = {
+            "splits": {name: s.to_record() for name, s in self.splits.items()},
+        }
+        if self.step is not None:
+            rec["step"] = int(self.step)
+        if self.disagreement is not None:
+            rec["disagreement"] = float(self.disagreement)
+        gap = self.generalization_gap
+        if gap is not None:
+            rec["generalization_gap"] = gap
+        return rec
+
+
+@dataclasses.dataclass
+class EvalHarness:
+    """Batched adapt-and-measure on ``maml.inner_adapt``.
+
+    ``curves(params, support, query)`` — params one launch model (no agent
+    axis), support/query task-leading pytrees — returns ``(n_tasks,
+    inner_steps + 1)`` query-loss curves.  ``agent_curves`` vmaps the same
+    primitive over a leading agent axis.  Both are jitted once per input
+    geometry.  Eval is never differentiated, so adaptation runs
+    ``first_order=True`` (a free no-op on the forward path).
+    """
+    loss_fn: LossFn
+    inner_lr: float
+    inner_steps: int = 1
+    splits: tuple[str, ...] = EVAL_SPLITS
+
+    def __post_init__(self):
+        def eval_one(params, support, query):
+            def body(p, _):
+                p = maml.inner_adapt(self.loss_fn, p, support,
+                                     alpha=self.inner_lr, steps=1,
+                                     first_order=True)
+                return p, self.loss_fn(p, query)
+
+            l0 = self.loss_fn(params, query)
+            _, losses = jax.lax.scan(body, params, None,
+                                     length=self.inner_steps)
+            return jnp.concatenate([l0[None], losses])
+
+        def curves(params, support, query):
+            return jax.vmap(lambda s, q: eval_one(params, s, q))(support,
+                                                                 query)
+
+        self._curves = jax.jit(curves)
+        self._agent_curves = jax.jit(jax.vmap(curves, in_axes=(0, None, None)))
+
+    # -- primitives ----------------------------------------------------------
+
+    def curves(self, params: PyTree, support: Any, query: Any) -> jax.Array:
+        """(n_tasks, inner_steps+1) loss curves for one launch model."""
+        return self._curves(params, support, query)
+
+    def agent_curves(self, params: PyTree, support: Any, query: Any
+                     ) -> jax.Array:
+        """(K, n_tasks, inner_steps+1): every agent's own launch model
+        measured on the same eval tasks."""
+        return self._agent_curves(params, support, query)
+
+    # -- the recurring-vs-unseen protocol ------------------------------------
+
+    def measure(self, params: PyTree, episode: Episode, split: str,
+                per_agent: bool = False,
+                prepare: Callable[[Any], Any] | None = None) -> SplitReport:
+        """One split's report.  ``params`` must carry a leading agent axis
+        when ``per_agent``; the centroid is its mean over that axis,
+        otherwise ``params`` is used as the centroid directly.  ``prepare``
+        post-processes (support, query) — e.g. appends modality stubs."""
+        support = jax.tree.map(jnp.asarray, episode.support)
+        query = jax.tree.map(jnp.asarray, episode.query)
+        if prepare is not None:
+            support, query = prepare((support, query))
+        centroid = diffusion.centroid(params) if per_agent else params
+        cc = np.asarray(self.curves(centroid, support, query)).mean(axis=0)
+        ac = None
+        if per_agent:
+            ac = np.asarray(self.agent_curves(params, support, query)
+                            ).mean(axis=(0, 1))
+        n_tasks = jax.tree.leaves(support)[0].shape[0]
+        return SplitReport(split, int(n_tasks), cc, ac)
+
+    def evaluate(self, state_or_params: Any, source: Any, n_tasks: int,
+                 seed: int | None = None, splits: tuple[str, ...] | None = None,
+                 prepare: Callable[[Any], Any] | None = None) -> EvalReport:
+        """Full protocol: draw ``n_tasks`` ``eval_sample`` episodes from
+        each split of ``source``, measure centroid + per-agent curves, and
+        report the generalization gap and disagreement-at-eval.
+
+        Accepts a ``TrainState`` (or any object with ``.params`` carrying a
+        leading agent axis) or a bare agent-stacked params pytree.
+        """
+        step = None
+        params = state_or_params
+        if hasattr(state_or_params, "params"):
+            params = state_or_params.params
+            s = getattr(state_or_params, "step", None)
+            step = int(s) if s is not None else None
+        reports = {}
+        for split in (self.splits if splits is None else splits):
+            ep = source.eval_sample(n_tasks, seed=seed, split=split)
+            reports[split] = self.measure(params, ep, split, per_agent=True,
+                                          prepare=prepare)
+        return EvalReport(step, reports,
+                          float(diffusion.disagreement(params)))

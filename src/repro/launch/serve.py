@@ -1,13 +1,17 @@
-"""Batched serving driver: adapt-then-serve.
+"""Batched serving driver: adapt-then-serve on the shared adaptation engine.
 
 Dif-MAML's product is a *launch model*: at serving time an agent adapts it
-to the live task with a few gradient steps (here: on a small support set),
-then serves batched decode requests from the adapted model.  This driver
-demonstrates the full path on CPU with a reduced config; the same
-``build_serve`` bundle lowers for the production mesh in the dry-run.
+to the live task with a few gradient steps, then serves batched decode
+requests from the adapted model.  Adaptation here is
+``maml.inner_adapt`` — the exact code path the meta step differentiates
+through (freeze masks, remat, multi-step scan all track automatically) —
+applied to the **centroid** of a training checkpoint (restore → mean over
+the agent axis) on an ``eval_sample`` support episode from the unified
+``TaskSource`` surface; decode then runs through the ``ServeBundle``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \\
-      --batch 4 --prompt-len 8 --gen 16 --adapt-steps 2
+      --batch 4 --prompt-len 8 --gen 16 --adapt-steps 2 --seed 0 \\
+      [--ckpt-dir ckpts/seed0]
 """
 from __future__ import annotations
 
@@ -18,19 +22,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import restore_centroid
 from repro.configs import INPUT_SHAPES, get_config
-from repro.data.lm_tasks import LMTaskSampler
+from repro.configs.base import InputShape
+from repro.core import maml
+from repro.data.lm_tasks import LMTaskSource
 from repro.launch.mesh import make_host_mesh
 from repro.launch import steps as S
 from repro.models.transformer import build_model
 
 
-def adapt(model, params, support, lr: float, steps: int):
-    """Task adaptation of the launch model (inner loop at serving time)."""
-    for _ in range(steps):
-        g = jax.grad(model.loss_fn)(params, support)
-        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
-    return params
+def make_support_source(cfg, seq_len: int, task_batch: int,
+                        seed: int = 0) -> LMTaskSource:
+    """Serve-time episode stream: one live task per request, drawn from a
+    small domain universe whose tail is held out — ``split='unseen'``
+    reproduces the launch scenario (adapt to a domain never trained on)."""
+    return LMTaskSource(
+        vocab_size=cfg.padded_vocab, seq_len=seq_len, K=1,
+        tasks_per_agent=1, task_batch=task_batch,
+        n_domains=8, holdout_domains=2, seed=seed)
 
 
 def main() -> None:
@@ -42,6 +52,18 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--adapt-steps", type=int, default=2)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="drives launch-model init (no checkpoint), the "
+                         "support episode draw, and sampling — serve-time "
+                         "sampling is reproducible per seed, not fixed")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="training checkpoint dir (e.g. ckpts/seed0): the "
+                         "launch model is the checkpoint's agent-centroid; "
+                         "omit to serve from a fresh init")
+    ap.add_argument("--split", default=None,
+                    choices=["recurring", "unseen", "full"],
+                    help="which eval split the live task is drawn from "
+                         "(default: unseen — the launch scenario)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -51,35 +73,51 @@ def main() -> None:
     mesh = make_host_mesh()
     dt = S.DTYPES[cfg.dtype] if not args.reduced else jnp.float32
 
-    with mesh:
-        params = model.init(jax.random.key(0), dt)
-        sampler = LMTaskSampler(cfg.padded_vocab, args.prompt_len + args.gen)
-        support = sampler.sample_task(0, args.batch, seed=1)
-        support = {k: jnp.asarray(v) for k, v in support.items()}
-        if cfg.arch_type == "audio":
-            support["encoder_frames"] = jnp.zeros(
-                (args.batch, cfg.encoder_frames, cfg.d_model), dt)
-        if cfg.arch_type == "vlm":
-            support["image_patches"] = jnp.zeros(
-                (args.batch, cfg.num_patches, cfg.d_model), dt)
-        t0 = time.time()
-        params = adapt(model, params, support, cfg.inner_lr, args.adapt_steps)
-        print(f"[serve] adapted launch model in {time.time()-t0:.2f}s "
-              f"({args.adapt_steps} steps)")
+    B = args.batch
+    total = args.prompt_len + args.gen
+    INPUT_SHAPES["serve_adapt"] = InputShape("serve_adapt", total, B, "decode")
 
-        B = args.batch
-        total = args.prompt_len + args.gen
+    with mesh:
+        bundle = S.build_serve(cfg, mesh, "serve_adapt")
+        if args.ckpt_dir:
+            params = restore_centroid(args.ckpt_dir, bundle.params_specs)
+            print(f"[serve] launch model = checkpoint centroid "
+                  f"({args.ckpt_dir})")
+        else:
+            params = model.init(jax.random.key(args.seed), dt)
+            print(f"[serve] launch model = fresh init (seed {args.seed})")
+
+        # -- adapt: one eval episode from the TaskSource surface ------------
+        source = make_support_source(cfg, total, B, seed=args.seed)
+        ep = source.eval_sample(1, split=args.split)
+        take0 = lambda tree: {k: jnp.asarray(v[0]) for k, v in tree.items()}
+        support = take0(ep.support)
+        support.update(S.modality_extras(cfg, (B,), dt))
+
+        adapt_fn = jax.jit(lambda p, batch: maml.inner_adapt(
+            model.loss_fn, p, batch, alpha=cfg.inner_lr,
+            steps=args.adapt_steps, first_order=True))
+        t0 = time.time()
+        params = jax.block_until_ready(adapt_fn(params, support))
+        print(f"[serve] adapted launch model to domain "
+              f"{int(np.asarray(ep.domains)[0])} in {time.time()-t0:.2f}s "
+              f"({args.adapt_steps} steps via maml.inner_adapt)")
+
+        # -- serve: batched decode through the ServeBundle ------------------
         enc = None
         if cfg.arch_type == "audio":
             enc = model.encode(params, support["encoder_frames"])
         elif cfg.arch_type == "vlm":
             enc = support["image_patches"] @ params["vision_proj"]
         cache = model.init_cache(B, total, dt, params=params, enc=enc)
-        step = jax.jit(model.decode_step)
+        step = jax.jit(bundle.step_fn)
 
-        prompt = np.asarray(support["tokens"])[:, : args.prompt_len]
+        # decode prompts come from the episode's *query* half: fresh
+        # sequences of the same domain the model just adapted to
+        prompt = np.asarray(ep.query["tokens"][0])[:, : args.prompt_len]
         out_tokens = [prompt[:, i] for i in range(args.prompt_len)]
         tok = jnp.asarray(prompt[:, :1])
+        sample_key = jax.random.key(args.seed)
         t0 = time.time()
         for t in range(total - 1):
             logits, cache = step(params, cache, tok,
@@ -88,7 +126,7 @@ def main() -> None:
                 tok = jnp.asarray(prompt[:, t + 1: t + 2])
             else:
                 if args.temperature > 0:
-                    key = jax.random.fold_in(jax.random.key(7), t)
+                    key = jax.random.fold_in(sample_key, t)
                     nxt = jax.random.categorical(
                         key, logits[:, 0] / args.temperature, axis=-1)
                 else:

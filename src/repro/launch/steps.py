@@ -56,7 +56,32 @@ def batch_geometry(cfg: ArchConfig, shape: InputShape, K: int
     T = cfg.meta_tasks
     while half % T:
         T -= 1
+    if T != cfg.meta_tasks:
+        import warnings
+        warnings.warn(
+            f"meta_tasks={cfg.meta_tasks} does not divide the per-agent "
+            f"half-batch {half} (global_batch={B}, K={K}); falling back to "
+            f"T={T} tasks per agent — the eq. 4 multi-task average degrades "
+            f"(T=1 erases it entirely). Pick a global_batch divisible by "
+            f"2·K·meta_tasks to keep the requested T.",
+            RuntimeWarning, stacklevel=2)
     return T, half // T
+
+
+def modality_extras(cfg: ArchConfig, lead: tuple[int, ...], dt) -> dict:
+    """Zero-stub modality inputs (audio frames / vision patches) the model's
+    loss expects beyond tokens/labels, with the given leading axes — the ONE
+    place the modality-input contract is spelled; train pipeline
+    (``lead=(B,)``), eval harness (``lead=(n_tasks, tb)``) and serve all
+    build their stubs here."""
+    extras = {}
+    if cfg.arch_type == "audio":
+        extras["encoder_frames"] = jnp.zeros(
+            lead + (cfg.encoder_frames, cfg.d_model), dt)
+    if cfg.arch_type == "vlm":
+        extras["image_patches"] = jnp.zeros(
+            lead + (cfg.num_patches, cfg.d_model), dt)
+    return extras
 
 
 def split_meta_batch(cfg: ArchConfig, batch: dict, K: int, T: int, tb: int,
@@ -169,6 +194,29 @@ class TrainBundle:
     state_shardings: Any
     batch_shardings: Any
     init_state: Any               # () -> TrainState (materialized)
+    loss_fn: Any = None           # (params, batch) -> scalar (single agent)
+
+    def make_eval_harness(self, inner_steps: int | None = None):
+        """The in-training recurring-vs-unseen eval engine, bound to this
+        bundle's model loss and inner learning rate — the same
+        ``maml.inner_adapt`` path the meta step differentiates through."""
+        from repro.eval.harness import EvalHarness
+        return EvalHarness(
+            self.loss_fn, inner_lr=self.cfg.inner_lr,
+            inner_steps=self.cfg.inner_steps if inner_steps is None
+            else inner_steps)
+
+    def eval_prepare(self):
+        """``prepare`` hook for :meth:`EvalHarness.evaluate`: appends the
+        per-task modality stubs (``modality_extras``) the model's loss
+        expects, on the task-leading eval layout."""
+        cfg, dt = self.cfg, DTYPES[self.cfg.dtype]
+
+        def add(d):
+            extras = modality_extras(cfg, d["tokens"].shape[:2], dt)
+            return {**d, **extras} if extras else d
+
+        return lambda sq: (add(sq[0]), add(sq[1]))
 
     def make_pipeline(self, source, *, depth: int = 2, start_step: int = 0):
         """Wrap a ``TaskSource`` bound to this bundle's (K, T, tb) geometry
@@ -188,13 +236,7 @@ class TrainBundle:
                 f"T={self.T}, tb={self.tb})")
         cfg, dt = self.cfg, DTYPES[self.cfg.dtype]
         B = self.K * self.T * self.tb * 2
-        extras = {}
-        if cfg.arch_type == "audio":
-            extras["encoder_frames"] = jnp.zeros(
-                (B, cfg.encoder_frames, cfg.d_model), dt)
-        if cfg.arch_type == "vlm":
-            extras["image_patches"] = jnp.zeros(
-                (B, cfg.num_patches, cfg.d_model), dt)
+        extras = modality_extras(cfg, (B,), dt)
 
         def prepare(ep):
             batch = ep.as_flat_batch()
@@ -296,7 +338,7 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
         return TrainState(jnp.zeros((), jnp.int32), params, opt.init(params))
 
     return TrainBundle(cfg, mesh, K, T, tb, train_step, state_abs, state_sh,
-                       batch_sh, init_state_fn)
+                       batch_sh, init_state_fn, loss_fn=model.loss_fn)
 
 
 # ---------------------------------------------------------------------------

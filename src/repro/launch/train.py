@@ -4,12 +4,23 @@ Runs the decentralized meta-training loop for any registered architecture.
 On real TPU slices this uses the production mesh; on CPU it falls back to a
 reduced config + host mesh so the same entrypoint exercises end-to-end.
 
+Every run emits a JSONL run log (``--run-log``, default
+``results/train_<arch>_seed<seed>.jsonl``): one ``{"kind": "train", ...}``
+record per logged step and — with ``--eval-every`` — one
+``{"kind": "eval", ...}`` record per :class:`~repro.eval.EvalHarness` pass,
+carrying the recurring-vs-unseen adaptation-loss curves, the generalization
+gap, and disagreement-at-eval.  Benchmarks and plots consume the log
+instead of scraping stdout.
+
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --steps 20 \\
-      --reduced --seq 64 --global-batch 16 --agents 4
+      --reduced --seq 64 --global-batch 16 --agents 4 --seed 1 \\
+      --eval-every 10 --eval-tasks 8
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -22,16 +33,41 @@ from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch import steps as S
 
 
-def make_train_source(cfg, shape, K: int, T: int, tb: int,
-                      seed: int = 0) -> LMTaskSource:
+def make_train_source(cfg, shape, K: int, T: int, tb: int, seed: int = 0,
+                      holdout_domains: int | None = None) -> LMTaskSource:
     """The production trainer's task stream: per-agent heterogeneous LM
     domain shards (the paper's π_k).  Replaces the old ``make_batch``,
     which sampled ONE domain for the entire global batch — every agent was
-    secretly training on the same distribution."""
+    secretly training on the same distribution.
+
+    On top of the trained universe, ``holdout_domains`` extra domains
+    (default ``max(2, K // 2)``) are appended and held out of every agent's
+    shard — the unseen split the in-training EvalHarness measures against.
+    """
+    n_train = max(8, 4 * K)
+    holdout = max(2, K // 2) if holdout_domains is None else holdout_domains
     return LMTaskSource(
         vocab_size=cfg.padded_vocab, seq_len=shape.seq_len,
         K=K, tasks_per_agent=T, task_batch=tb,
-        n_domains=max(8, 4 * K), seed=seed)
+        n_domains=n_train + holdout, holdout_domains=holdout, seed=seed)
+
+
+class RunLog:
+    """JSONL writer, one flushed record per line.  ``resume=True`` appends
+    (a checkpoint-resumed run continues its existing log); otherwise the
+    file restarts with the run."""
+
+    def __init__(self, path: str, resume: bool = False):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._f = open(path, "a" if resume else "w")
+
+    def write(self, **record) -> None:
+        self._f.write(json.dumps(record) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
 
 
 def main() -> None:
@@ -39,6 +75,10 @@ def main() -> None:
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="run seed: threads through launch-model init, the "
+                         "task source, and checkpoint naming (ckpt-dir/"
+                         "seed<N>/) so independent runs never collide")
     ap.add_argument("--reduced", action="store_true",
                     help="smoke-scale variant (CPU)")
     ap.add_argument("--seq", type=int, default=64)
@@ -47,6 +87,17 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=1)
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="run the recurring-vs-unseen EvalHarness every n "
+                         "steps (0 = off); results go to the run log")
+    ap.add_argument("--eval-tasks", type=int, default=8,
+                    help="eval tasks drawn per split per harness pass")
+    ap.add_argument("--eval-inner-steps", type=int, default=3,
+                    help="adaptation steps measured by the eval harness "
+                         "(curves have this + 1 entries; index 0 = 0-shot)")
+    ap.add_argument("--run-log", default=None,
+                    help="JSONL run log path (default results/"
+                         "train_<arch>_seed<seed>.jsonl)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="meta-batch pipeline depth (0 = sample "
@@ -68,35 +119,77 @@ def main() -> None:
         shape_name = args.shape
         shape = INPUT_SHAPES[shape_name]
 
+    ckpt_dir = (os.path.join(args.ckpt_dir, f"seed{args.seed}")
+                if args.ckpt_dir else None)
+    resuming = ckpt_dir is not None and latest_step(ckpt_dir) is not None
+    log_path = args.run_log or os.path.join(
+        "results", f"train_{cfg.name}_seed{args.seed}.jsonl")
+    run_log = RunLog(log_path, resume=resuming)
+
     with mesh:
         bundle = S.build_train(cfg, mesh, shape_name,
                                combine_override=args.combine)
         print(f"[train] {cfg.name}: K={bundle.K} agents, "
-              f"T={bundle.T} tasks × {bundle.tb} examples, mode={cfg.meta_mode}")
-        state = bundle.init_state(seed=0)
-        if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
-            state = restore_checkpoint(args.ckpt_dir, state)
+              f"T={bundle.T} tasks × {bundle.tb} examples, "
+              f"mode={cfg.meta_mode}, seed={args.seed}")
+        state = bundle.init_state(seed=args.seed)
+        if resuming:
+            state = restore_checkpoint(ckpt_dir, state)
             print(f"[train] restored step {int(state.step)}")
         step_fn = jax.jit(bundle.step_fn, donate_argnums=(0,))
-        source = make_train_source(cfg, shape, bundle.K, bundle.T, bundle.tb)
-        print(f"[train] task source: {source.n_train_domains} domains, "
+        source = make_train_source(cfg, shape, bundle.K, bundle.T, bundle.tb,
+                                   seed=args.seed)
+        print(f"[train] task source: {source.n_train_domains} domains "
+              f"(+{source.holdout_domains} held out), "
               f"{source.heterogeneity} over K={bundle.K} agents, "
               f"prefetch depth {args.prefetch}")
+        harness = prepare = None
+        if args.eval_every:
+            harness = bundle.make_eval_harness(args.eval_inner_steps)
+            prepare = bundle.eval_prepare()
+            print(f"[train] eval hook: recurring-vs-unseen, "
+                  f"{args.eval_tasks} tasks × {args.eval_inner_steps} "
+                  f"adaptation steps every {args.eval_every} steps "
+                  f"-> {log_path}")
+        run_log.write(kind="config", arch=cfg.name, seed=args.seed,
+                      K=bundle.K, T=bundle.T, tb=bundle.tb,
+                      mode=cfg.meta_mode, steps=args.steps,
+                      n_domains=source.n_domains,
+                      holdout_domains=source.holdout_domains)
         t0 = time.time()
         with bundle.make_pipeline(source, depth=args.prefetch,
                                   start_step=int(state.step)) as pipe:
             for i in range(args.steps):
                 state, metrics = step_fn(state, next(pipe))
                 if i % args.log_every == 0:
+                    loss = float(metrics["loss"])
+                    dis = float(metrics["disagreement"])
                     print(f"step {int(state.step):5d} "
-                          f"loss {float(metrics['loss']):.4f} "
-                          f"disagreement {float(metrics['disagreement']):.3e} "
+                          f"loss {loss:.4f} "
+                          f"disagreement {dis:.3e} "
                           f"({time.time() - t0:.1f}s)")
-                if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
-                    save_checkpoint(args.ckpt_dir, int(state.step), state)
-        if args.ckpt_dir:
-            save_checkpoint(args.ckpt_dir, int(state.step), state)
-    print("[train] done")
+                    run_log.write(kind="train", step=int(state.step),
+                                  loss=loss, disagreement=dis,
+                                  time_s=round(time.time() - t0, 3))
+                if harness is not None and (
+                        (i + 1) % args.eval_every == 0
+                        or i == args.steps - 1):
+                    report = harness.evaluate(state, source, args.eval_tasks,
+                                              prepare=prepare)
+                    rec = report.to_record()
+                    run_log.write(kind="eval", **rec)
+                    rc = rec["splits"]["recurring"]["centroid_curve"]
+                    uc = rec["splits"]["unseen"]["centroid_curve"]
+                    print(f"[eval] step {int(state.step)} "
+                          f"recurring {rc[0]:.3f}->{rc[-1]:.3f} "
+                          f"unseen {uc[0]:.3f}->{uc[-1]:.3f} "
+                          f"gap {rec['generalization_gap']:.4f}")
+                if ckpt_dir and (i + 1) % args.ckpt_every == 0:
+                    save_checkpoint(ckpt_dir, int(state.step), state)
+        if ckpt_dir:
+            save_checkpoint(ckpt_dir, int(state.step), state)
+    run_log.close()
+    print(f"[train] done (run log: {log_path})")
 
 
 if __name__ == "__main__":

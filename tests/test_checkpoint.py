@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint import (save_checkpoint, restore_checkpoint,
+                              restore_centroid, latest_step)
 from repro.core import MetaConfig, init_state
 from repro.optim import adam
 
@@ -35,6 +36,42 @@ def test_latest_step_picks_max(tmp_path):
 def test_restore_missing_raises(tmp_path):
     with pytest.raises(FileNotFoundError):
         restore_checkpoint(str(tmp_path / "none"), _state())
+
+
+def test_restore_centroid_means_agent_axis(tmp_path):
+    """The serve path's entry point: single-agent params = mean over K."""
+    state = _state()
+    save_checkpoint(str(tmp_path), 3, state)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                        state.params)
+    centroid = restore_centroid(str(tmp_path), like)
+    expect = jax.tree.map(lambda x: np.asarray(x).mean(axis=0), state.params)
+    for a, b in zip(jax.tree.leaves(centroid), jax.tree.leaves(expect)):
+        assert a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a), b, rtol=1e-6)
+
+
+def test_restore_centroid_bfloat16_checkpoint(tmp_path):
+    """bfloat16 leaves round-trip npz as raw bytes — centroid must still
+    decode, average, and land in the requested dtype."""
+    from repro.core.meta_trainer import TrainState
+    params = {"w": jnp.arange(6, dtype=jnp.bfloat16).reshape(3, 2)}
+    state = TrainState(jnp.zeros((), jnp.int32), params, ())
+    save_checkpoint(str(tmp_path), 0, state)
+    like = {"w": jax.ShapeDtypeStruct((2,), jnp.float32)}
+    centroid = restore_centroid(str(tmp_path), like)
+    assert centroid["w"].dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(centroid["w"]), [2.0, 3.0])
+
+
+def test_restore_centroid_shape_mismatch_raises(tmp_path):
+    state = _state()
+    save_checkpoint(str(tmp_path), 0, state)
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((9,) + x.shape[2:], x.dtype),
+        state.params)
+    with pytest.raises(ValueError, match="agent-stacked"):
+        restore_centroid(str(tmp_path), like)
 
 
 def test_shape_mismatch_raises(tmp_path):

@@ -200,6 +200,71 @@ def test_fewshot_source_rejects_shards_too_small_for_way():
 
 
 # ---------------------------------------------------------------------------
+# The recurring-vs-unseen split contract (Fallah et al. 2021): on every
+# source, split='recurring' draws only trained domains, split='unseen' only
+# held-out ones, and the two sets are disjoint.
+# ---------------------------------------------------------------------------
+
+def make_split_sources():
+    return [
+        SineTaskSource(K=4, tasks_per_agent=3, shots=5, n_domains=16,
+                       holdout_domains=4, seed=3),
+        FewShotTaskSource(K=3, tasks_per_agent=2, n_classes=40, n_way=4,
+                          k_shot=1, n_query=3, seed=3),
+        LMTaskSource(vocab_size=256, seq_len=12, K=4, tasks_per_agent=2,
+                     task_batch=3, n_domains=12, holdout_domains=2, seed=3),
+    ]
+
+
+@pytest.mark.parametrize("source", make_split_sources(), ids=SOURCE_IDS)
+def test_eval_splits_draw_disjoint_domain_sets(source):
+    rec = source.eval_sample(64, seed=1, split="recurring")
+    uns = source.eval_sample(64, seed=1, split="unseen")
+    rec_doms = set(np.asarray(rec.domains).reshape(-1).tolist())
+    uns_doms = set(np.asarray(uns.domains).reshape(-1).tolist())
+    assert rec_doms and uns_doms
+    assert not rec_doms & uns_doms, \
+        f"recurring and unseen overlap: {rec_doms & uns_doms}"
+
+
+@pytest.mark.parametrize("source", make_split_sources(), ids=SOURCE_IDS)
+def test_recurring_is_trained_unseen_is_not(source):
+    """'recurring' ⊆ the union of agent shards; 'unseen' touches none."""
+    trained = set(np.concatenate(
+        [s.domains for s in source.sources()]).tolist())
+    rec = source.eval_sample(64, seed=2, split="recurring")
+    uns = source.eval_sample(64, seed=2, split="unseen")
+    assert set(np.asarray(rec.domains).reshape(-1).tolist()) <= trained
+    assert not set(np.asarray(uns.domains).reshape(-1).tolist()) & trained
+
+
+def test_sine_unseen_without_holdout_raises():
+    src = SineTaskSource(K=4, n_domains=16, holdout_domains=0)
+    with pytest.raises(ValueError, match="holdout_domains"):
+        src.eval_sample(4, split="unseen")
+    # legacy default (full range) and recurring still work
+    assert src.eval_sample(4).domains.shape == (4,)
+    assert src.eval_sample(4, split="recurring").domains.shape == (4,)
+
+
+def test_unknown_split_rejected():
+    src = SineTaskSource(K=4, n_domains=16, holdout_domains=4)
+    with pytest.raises(ValueError, match="unknown eval split"):
+        src.eval_sample(4, split="test")
+
+
+def test_sine_holdout_excluded_from_training():
+    src = SineTaskSource(K=4, tasks_per_agent=3, n_domains=16,
+                         holdout_domains=4, seed=0)
+    held_out = set(range(12, 16))
+    for stream in src.sources():
+        assert not set(stream.domains.tolist()) & held_out
+    for step in range(4):
+        drawn = set(np.asarray(src.sample(step).domains).reshape(-1).tolist())
+        assert not drawn & held_out
+
+
+# ---------------------------------------------------------------------------
 # Vectorized LM generation matches the domain Markov structure
 # ---------------------------------------------------------------------------
 

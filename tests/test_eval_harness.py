@@ -1,0 +1,148 @@
+"""The shared adaptation-at-evaluation-time engine (repro.eval).
+
+Parity: the harness's measured losses must BIT-match the trainer's own
+forward path (``maml.meta_loss``) — eval and train adapt through the same
+``maml.inner_adapt``, so any drift is a bug, not a tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import MetaConfig, diffusion, init_state, make_eval_fn, maml
+from repro.data import LMTaskSource, SineTaskSource
+from repro.eval import EvalHarness
+from repro.models.simple import SineMLP
+
+
+@pytest.fixture(scope="module")
+def sine_model():
+    cfg = get_config("sine_mlp")
+    return SineMLP(cfg)
+
+
+@pytest.fixture(scope="module")
+def sine_source():
+    return SineTaskSource(K=4, tasks_per_agent=3, shots=6, n_domains=16,
+                          holdout_domains=4, seed=0)
+
+
+def _eval_batch(source, n_tasks=8, seed=5, split=None):
+    ep = source.eval_sample(n_tasks, seed=seed, split=split)
+    return (jax.tree.map(jnp.asarray, ep.support),
+            jax.tree.map(jnp.asarray, ep.query))
+
+
+def test_harness_bitmatches_meta_loss_fomaml(sine_model, sine_source):
+    """Zero-shot = plain query loss; one-step = meta_loss('fomaml', steps=1).
+    Exact equality: the harness IS the trainer's forward path."""
+    model = sine_model
+    params = model.init(jax.random.key(0))
+    esup, eqry = _eval_batch(sine_source)
+    h = EvalHarness(model.loss_fn, inner_lr=0.01, inner_steps=1)
+    curves = np.asarray(h.curves(params, esup, eqry))      # (tasks, 2)
+
+    per_task = jax.jit(jax.vmap(lambda s, q: (
+        model.loss_fn(params, q),
+        maml.meta_loss(model.loss_fn, params, s, q, alpha=0.01, steps=1,
+                       mode="fomaml"))))
+    l0, l1 = (np.asarray(x) for x in per_task(esup, eqry))
+    np.testing.assert_array_equal(curves[:, 0], l0)
+    np.testing.assert_array_equal(curves[:, 1], l1)
+
+
+def test_harness_multi_step_matches_meta_loss(sine_model, sine_source):
+    """Curve index s = meta_loss after s inner steps, for every s."""
+    model = sine_model
+    params = model.init(jax.random.key(1))
+    esup, eqry = _eval_batch(sine_source, n_tasks=4)
+    steps = 3
+    h = EvalHarness(model.loss_fn, inner_lr=0.01, inner_steps=steps)
+    curves = np.asarray(h.curves(params, esup, eqry))
+    for s in range(1, steps + 1):
+        ml = jax.jit(jax.vmap(lambda sup, q: maml.meta_loss(
+            model.loss_fn, params, sup, q, alpha=0.01, steps=s,
+            mode="fomaml")))
+        np.testing.assert_allclose(curves[:, s], np.asarray(ml(esup, eqry)),
+                                   rtol=1e-6)
+
+
+def test_make_eval_fn_is_harness_curves(sine_model, sine_source):
+    """The compatibility wrapper returns exactly the harness primitive."""
+    model = sine_model
+    params = model.init(jax.random.key(2))
+    esup, eqry = _eval_batch(sine_source)
+    ev = make_eval_fn(model.loss_fn, inner_lr=0.01, inner_steps=2)
+    h = EvalHarness(model.loss_fn, inner_lr=0.01, inner_steps=2)
+    np.testing.assert_array_equal(np.asarray(ev(params, esup, eqry)),
+                                  np.asarray(h.curves(params, esup, eqry)))
+
+
+def test_evaluate_full_protocol_on_trainstate(sine_model, sine_source):
+    """TrainState in → both splits, centroid + per-agent curves, gap and
+    disagreement out; the JSONL record is complete and serializable."""
+    import json
+    model = sine_model
+    mcfg = MetaConfig(num_agents=4, tasks_per_agent=3)
+    state = init_state(jax.random.key(0), model.init, mcfg)
+    h = EvalHarness(model.loss_fn, inner_lr=0.01, inner_steps=2)
+    report = h.evaluate(state, sine_source, n_tasks=6, seed=3)
+    assert set(report.splits) == {"recurring", "unseen"}
+    for s in report.splits.values():
+        assert s.centroid_curve.shape == (3,)
+        assert s.agent_curve.shape == (3,)
+        assert s.n_tasks == 6
+    assert report.disagreement > 0        # independent inits disagree
+    rec = json.loads(json.dumps(report.to_record()))
+    assert rec["step"] == 0
+    assert {"recurring", "unseen"} <= set(rec["splits"])
+    assert rec["generalization_gap"] == pytest.approx(
+        report.splits["unseen"].centroid_curve[-1]
+        - report.splits["recurring"].centroid_curve[-1])
+
+
+def test_evaluate_centroid_equals_identical_agents(sine_model, sine_source):
+    """With identical per-agent params the agent curve equals the centroid
+    curve — the per-agent path measures the same engine."""
+    model = sine_model
+    mcfg = MetaConfig(num_agents=3, tasks_per_agent=2)
+    state = init_state(jax.random.key(4), model.init, mcfg,
+                       identical_init=True)
+    h = EvalHarness(model.loss_fn, inner_lr=0.01, inner_steps=1)
+    report = h.evaluate(state, sine_source, n_tasks=5, seed=9)
+    for s in report.splits.values():
+        np.testing.assert_allclose(s.agent_curve, s.centroid_curve,
+                                   rtol=1e-6)
+    assert report.disagreement < 1e-12
+
+
+def test_evaluate_accepts_bare_agent_params(sine_model, sine_source):
+    model = sine_model
+    mcfg = MetaConfig(num_agents=2, tasks_per_agent=2)
+    state = init_state(jax.random.key(5), model.init, mcfg)
+    h = EvalHarness(model.loss_fn, inner_lr=0.01, inner_steps=1)
+    via_state = h.evaluate(state, sine_source, n_tasks=4, seed=1)
+    via_params = h.evaluate(state.params, sine_source, n_tasks=4, seed=1)
+    assert via_params.step is None
+    np.testing.assert_array_equal(
+        via_state.splits["unseen"].centroid_curve,
+        via_params.splits["unseen"].centroid_curve)
+
+
+def test_harness_on_lm_source_task_batch_layout():
+    """Dict-batch (LM) episodes flow through the same engine."""
+    src = LMTaskSource(vocab_size=64, seq_len=8, K=2, tasks_per_agent=2,
+                       task_batch=2, n_domains=8, holdout_domains=2, seed=0)
+
+    def loss_fn(params, batch):
+        pred = batch["tokens"].astype(jnp.float32) * params["s"]
+        return jnp.mean((pred - batch["labels"].astype(jnp.float32)) ** 2)
+
+    params = {"s": jnp.asarray(0.1)}
+    h = EvalHarness(loss_fn, inner_lr=0.001, inner_steps=2)
+    ep = src.eval_sample(5, seed=2, split="unseen")
+    curves = h.curves(params, jax.tree.map(jnp.asarray, ep.support),
+                      jax.tree.map(jnp.asarray, ep.query))
+    assert curves.shape == (5, 3)
+    assert bool(jnp.all(jnp.isfinite(curves)))

@@ -54,16 +54,25 @@ def test_batch_geometry_rejects_indivisible_batch():
 
 def test_batch_geometry_T_falls_back():
     """T retreats from cfg.meta_tasks toward 1 until it divides the
-    per-agent half batch."""
+    per-agent half batch — and WARNS with the requested and effective T
+    (silent degradation erased the eq. 4 multi-task average)."""
     import dataclasses
     from repro.configs.base import InputShape
     cfg = dataclasses.replace(get_config("qwen2-7b"), meta_tasks=4)
     # half = 6: 6 % 4 != 0, 6 % 3 == 0 -> T=3, tb=2
-    assert S.batch_geometry(cfg, InputShape("x", 16, 24, "train"), K=2) == (3, 2)
+    with pytest.warns(RuntimeWarning, match=r"meta_tasks=4.*T=3"):
+        assert S.batch_geometry(cfg, InputShape("x", 16, 24, "train"),
+                                K=2) == (3, 2)
     # half = 5: falls all the way back to T=1, tb=5
-    assert S.batch_geometry(cfg, InputShape("x", 16, 20, "train"), K=2) == (1, 5)
-    # exact fit keeps meta_tasks
-    assert S.batch_geometry(cfg, InputShape("x", 16, 16, "train"), K=2) == (4, 1)
+    with pytest.warns(RuntimeWarning, match=r"meta_tasks=4.*T=1"):
+        assert S.batch_geometry(cfg, InputShape("x", 16, 20, "train"),
+                                K=2) == (1, 5)
+    # exact fit keeps meta_tasks — and stays silent
+    import warnings as W
+    with W.catch_warnings():
+        W.simplefilter("error")
+        assert S.batch_geometry(cfg, InputShape("x", 16, 16, "train"),
+                                K=2) == (4, 1)
 
 
 def test_split_meta_batch_layout():
