@@ -21,8 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (MetaConfig, init_state, make_eval_fn, make_meta_step,
-                        diffusion, topology)
+from repro.core import (MetaConfig, TopologyConfig, UpdateConfig, init_state,
+                        make_eval_fn, make_meta_step, diffusion, topology)
 from repro.data import (Episode, FewShotTaskSource, MetaBatchPipeline,
                         SineTaskSource)
 from repro.models.simple import FewShotCNN, SineMLP
@@ -547,6 +547,75 @@ def bench_meta_modes(quick: bool):
 
 
 
+def bench_mixing(quick: bool):
+    """Mixing family: disagreement-decay rate per DiffusionStrategy ×
+    TopologySchedule vs the theoretical linear rate of Thm 1.
+
+    For each (topology ∈ {ring, full}) × (schedule ∈ {static,
+    link_failure}) × (strategy ∈ {atc, cta, consensus}) the network starts
+    from independent inits and the per-step geometric decay of the network
+    disagreement over the transient is fitted and compared against λ₂² of
+    the (mean) combination matrix — the contraction constant Thm 1
+    predicts for one combine.  ``us_per_call`` = MEDIAN wall time of the
+    last jitted steps (2-vCPU noise protocol — strategy overhead shows up
+    here: cta pays its pre-mix)."""
+    from repro.core.meta_trainer import schedule_for
+
+    cfg = get_config("sine_mlp")
+    model = SineMLP(cfg)
+    K = 6
+    steps = 40 if quick else 150
+    fit_n = 8                     # early-transient window for the rate fit
+    source = SineTaskSource(K=K, tasks_per_agent=3, shots=10, seed=0)
+    out = {}
+    for topo in ["ring", "full"]:
+        for sched in ["static", "link_failure"]:
+            for strat in ["atc", "cta", "consensus"]:
+                mcfg = MetaConfig(
+                    num_agents=K, tasks_per_agent=3, inner_lr=0.01,
+                    outer_optimizer="sgd", outer_lr=1e-3,
+                    update_config=UpdateConfig(strategy=strat),
+                    topology_config=TopologyConfig(
+                        graph=topo, schedule=sched, link_failure_p=0.3,
+                        seed=0))
+                schedule = schedule_for(mcfg)
+                lam2 = schedule.mean_mixing_rate
+                state = init_state(jax.random.key(1), model.init, mcfg,
+                                   identical_init=False)
+                step = jax.jit(make_meta_step(model.loss_fn, mcfg))
+                ds = [float(diffusion.disagreement(state.params))]
+                times = []
+                with MetaBatchPipeline(source, depth=2,
+                                       prepare=_DEVICE_EP) as pipe:
+                    for i in range(steps):
+                        sup, qry = next(pipe)
+                        t0 = time.perf_counter()
+                        state, m = step(state, sup, qry)
+                        if i >= steps - 5:
+                            jax.block_until_ready(m["loss"])
+                            times.append(time.perf_counter() - t0)
+                        ds.append(float(m["disagreement"]))
+                us = float(np.median(times)) * 1e6
+                rate = float((ds[fit_n] / ds[0]) ** (1.0 / fit_n))
+                plateau = float(np.mean(ds[-10:]))
+                name = f"mixing_{topo}_{strat}_{sched}"
+                out[name] = {"lambda2": lam2, "theory_rate": lam2 ** 2,
+                             "decay_rate": rate, "plateau": plateau,
+                             "curve": ds}
+                emit(name, us,
+                     f"decay_rate={rate:.3f};theory_rate={lam2 ** 2:.3f};"
+                     f"plateau={plateau:.3e}")
+    ring = {s: out[f"mixing_ring_{s}_static"]["decay_rate"]
+            for s in ["atc", "cta", "consensus"]}
+    lf_slows = (out["mixing_ring_atc_link_failure"]["decay_rate"]
+                >= out["mixing_ring_atc_static"]["decay_rate"] - 0.05)
+    emit("mixing_summary", 0.0,
+         "ring_static_rates=atc:%.3f,cta:%.3f,consensus:%.3f;"
+         "link_failure_slows_or_matches=%s" %
+         (ring["atc"], ring["cta"], ring["consensus"], lf_slows),
+         detail=out)
+
+
 def bench_topology_ablation(quick: bool):
     """Beyond-paper: Thm 1 makes λ₂ (the mixing rate) the contraction
     constant of the network — sweep topologies at K=16 and relate λ₂ to
@@ -604,6 +673,7 @@ BENCHES = {
     "generalization": bench_generalization_gap,
     "modes": bench_meta_modes,
     "pipeline": bench_pipeline,
+    "mixing": bench_mixing,
     "topology": bench_topology_ablation,
 }
 

@@ -26,6 +26,7 @@ import jax
 
 from repro.checkpoint import save_checkpoint
 from repro.configs.base import ArchConfig, INPUT_SHAPES, InputShape
+from repro.core import topology, update
 from repro.data import LMTaskSource
 from repro.launch.mesh import make_host_mesh
 from repro.launch import steps as S
@@ -57,6 +58,15 @@ def main():
     ap.add_argument("--global-batch", type=int, default=None)
     ap.add_argument("--prefetch", type=int, default=2)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--strategy", default=None,
+                    choices=sorted(update.update_strategies()),
+                    help="outer-update strategy (default atc)")
+    ap.add_argument("--schedule", default="static",
+                    choices=sorted(topology.SCHEDULES),
+                    help="per-step topology schedule")
+    ap.add_argument("--link-failure-p", type=float, default=0.2,
+                    help="per-edge drop probability for --schedule "
+                         "link_failure")
     args = ap.parse_args()
 
     cfg = lm_100m(args.tiny)
@@ -67,11 +77,17 @@ def main():
 
     mesh = make_host_mesh(data=min(4, len(jax.devices())))
     with mesh:
-        bundle = S.build_train(cfg, mesh, shape.name)
+        bundle = S.build_train(cfg, mesh, shape.name,
+                               strategy=args.strategy,
+                               schedule=args.schedule,
+                               link_failure_p=args.link_failure_p)
         model = build_model(cfg)
         n = count_params(model.specs())
         print(f"[lm] {cfg.name}: {n/1e6:.1f}M params, K={bundle.K} agents, "
-              f"T={bundle.T}×{bundle.tb} tasks, seq={seq}, batch={gb}")
+              f"T={bundle.T}×{bundle.tb} tasks, seq={seq}, batch={gb}, "
+              f"strategy={bundle.mcfg.update_config.strategy}"
+              + (f" ({args.schedule} schedule)"
+                 if args.schedule != "static" else ""))
         state = bundle.init_state(seed=0)
         step = jax.jit(bundle.step_fn, donate_argnums=(0,))
         source = LMTaskSource(

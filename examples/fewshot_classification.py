@@ -20,7 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import MetaConfig, diffusion, init_state, make_meta_step
+from repro.core import (MetaConfig, TopologyConfig, UpdateConfig, diffusion,
+                        init_state, make_meta_step)
 from repro.data import Episode, FewShotTaskSource, MetaBatchPipeline
 from repro.models.simple import FewShotCNN
 
@@ -53,12 +54,14 @@ def main():
           f"sharded across K={source.K} agents, eval on "
           f"{source.n_test_domains} meta-test classes")
 
-    for strat, combine in [("centralized", "centralized"),
-                           ("dif-maml", "dense"),
-                           ("non-coop", "none")]:
+    for label, strategy in [("centralized", "centralized"),
+                            ("dif-maml", "atc"),
+                            ("non-coop", "none")]:
         mcfg = MetaConfig(num_agents=6, tasks_per_agent=2,
-                          inner_lr=cfg.inner_lr, mode="maml",
-                          combine=combine, topology="paper",
+                          inner_lr=cfg.inner_lr,
+                          update_config=UpdateConfig(strategy=strategy,
+                                                     inner="maml"),
+                          topology_config=TopologyConfig(graph="paper"),
                           outer_optimizer="adam", outer_lr=1e-3)
         state = init_state(jax.random.key(0), model.init, mcfg,
                            identical_init=True)
@@ -70,7 +73,7 @@ def main():
                 state, m = step(state, sup, qry)
         centroid = diffusion.centroid(state.params)
         acc = test_accuracy(model, centroid, source, cfg.inner_lr)
-        print(f"{strat:12s} meta-train loss {float(m['loss']):.3f}   "
+        print(f"{label:12s} meta-train loss {float(m['loss']):.3f}   "
               f"5-way 1-shot test acc {acc:.3f}")
 
 

@@ -6,7 +6,14 @@ the paper's Fig. 2a graph and jointly meta-learn a launch model that adapts
 to *any* sinusoid in one gradient step.  Episodes stream through the
 ``MetaBatchPipeline`` prefetcher so sampling overlaps the jitted step.
 
-  PYTHONPATH=src python examples/quickstart.py [--steps 400]
+The outer update is assembled from the three first-class axes: a
+``DiffusionStrategy`` (``--strategy``: atc is the paper's Algorithm 1, cta
+and consensus its classic alternatives), a ``TopologySchedule``
+(``--schedule``: static / link_failure / gossip / round_robin), and the
+graph itself (``--topology``).
+
+  PYTHONPATH=src python examples/quickstart.py [--steps 400] \\
+      [--strategy cta] [--schedule link_failure]
 """
 import argparse
 import os
@@ -19,8 +26,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (MetaConfig, diffusion, init_state, make_eval_fn,
-                        make_meta_step, topology)
+from repro.core import (MetaConfig, TopologyConfig, UpdateConfig, diffusion,
+                        init_state, make_eval_fn, make_meta_step, topology,
+                        update)
+from repro.core.meta_trainer import schedule_for
 from repro.data import Episode, MetaBatchPipeline, SineTaskSource
 from repro.models.simple import SineMLP
 
@@ -30,22 +39,31 @@ def main():
     ap.add_argument("--steps", type=int, default=400)
     ap.add_argument("--agents", type=int, default=6)
     ap.add_argument("--topology", default="paper")
+    ap.add_argument("--strategy", default="atc",
+                    choices=sorted(update.update_strategies()))
+    ap.add_argument("--schedule", default="static",
+                    choices=sorted(topology.SCHEDULES))
+    ap.add_argument("--link-failure-p", type=float, default=0.2)
     ap.add_argument("--prefetch", type=int, default=2)
     args = ap.parse_args()
 
     cfg = get_config("sine_mlp")
     model = SineMLP(cfg)
     K = args.agents
-    mcfg = MetaConfig(num_agents=K, tasks_per_agent=5, inner_lr=cfg.inner_lr,
-                      mode="maml", combine="dense",
-                      topology=args.topology if K == 6 else "ring",
-                      outer_optimizer="adam", outer_lr=1e-3)
-    A = topology.combination_matrix(mcfg.num_agents, mcfg.topology)
+    mcfg = MetaConfig(
+        num_agents=K, tasks_per_agent=5, inner_lr=cfg.inner_lr,
+        outer_optimizer="adam", outer_lr=1e-3,
+        update_config=UpdateConfig(strategy=args.strategy, inner="maml"),
+        topology_config=TopologyConfig(
+            graph=args.topology if K == 6 else "ring",
+            schedule=args.schedule, link_failure_p=args.link_failure_p))
+    sched = schedule_for(mcfg)
     source = SineTaskSource(K=K, tasks_per_agent=5, shots=10, seed=0)
-    print(f"K={K} agents on '{mcfg.topology}' graph, "
-          f"λ₂={topology.mixing_rate(A):.3f} (mixing rate, Thm 1); "
-          f"{source.heterogeneity}: {source.n_domains} amplitude bands "
-          f"sharded across agents")
+    print(f"K={K} agents, strategy={args.strategy} on "
+          f"'{sched.topology.name}' graph ({sched.kind} schedule, period "
+          f"{sched.period}), mean λ₂={sched.mean_mixing_rate:.3f} "
+          f"(mixing rate, Thm 1); {source.heterogeneity}: "
+          f"{source.n_domains} amplitude bands sharded across agents")
 
     state = init_state(jax.random.key(0), model.init, mcfg,
                        identical_init=True)

@@ -1,13 +1,21 @@
 """Dif-MAML core: decentralized meta-learning over a graph of agents.
 
 The paper's contribution (Algorithm 1) lives here:
-  - topology.py      combination matrices A (Assumption 6) + mixing rate lambda_2
+  - topology.py      combination matrices A (Assumption 6), mixing rate
+                     lambda_2, and per-step TopologySchedules (static,
+                     link-failure, gossip, round-robin)
   - maml.py          inner adaptation and the stochastic meta-gradient (eq. 4)
-  - diffusion.py     Adapt-then-Combine over the agent axis (eq. 6a/6b)
-  - meta_trainer.py  the full decentralized trainer + baselines
+  - diffusion.py     combine backends over the agent axis (eq. 6b)
+  - update.py        DiffusionStrategy (atc/cta/consensus/none/centralized),
+                     InnerAlgo registry, CommSchedule
+  - meta_trainer.py  the InnerAlgo x DiffusionStrategy x CommSchedule
+                     assembly + nested TopologyConfig/UpdateConfig
 """
-from repro.core.meta_trainer import MetaConfig, TrainState, init_state, make_meta_step, make_eval_fn
-from repro.core import topology, maml, diffusion
+from repro.core.meta_trainer import (MetaConfig, TopologyConfig, UpdateConfig,
+                                     TrainState, init_state, make_meta_step,
+                                     make_eval_fn)
+from repro.core import topology, maml, diffusion, update
 
-__all__ = ["MetaConfig", "TrainState", "init_state", "make_meta_step",
-           "make_eval_fn", "topology", "maml", "diffusion"]
+__all__ = ["MetaConfig", "TopologyConfig", "UpdateConfig", "TrainState",
+           "init_state", "make_meta_step", "make_eval_fn",
+           "topology", "maml", "diffusion", "update"]

@@ -75,7 +75,11 @@ import numpy as np
 from repro import compat
 
 PyTree = Any
-CombineFn = Callable[[PyTree], PyTree]
+# Every registered backend returns ``combine(phi, step=None)``: the optional
+# traced step index selects the current matrix of a stacked ``(S, K, K)``
+# schedule (static matrices ignore it), so dynamic graphs stay inside one
+# jit-compiled step function.
+CombineFn = Callable[..., PyTree]
 
 __all__ = [
     "dense_combine",
@@ -90,6 +94,7 @@ __all__ = [
     "register_backend",
     "combine_backends",
     "select_backend",
+    "resolve_schedule_backend",
     "make_combine",
     "atc_step",
     "cta_step",
@@ -288,17 +293,10 @@ def make_pallas_combine(A: np.ndarray | jax.Array, *, block_m: int = 512,
     ``interpret=None`` auto-detects: compiled on TPU, interpreter elsewhere
     (bitwise-identical math, lets CPU tests exercise the production path).
     """
-    from repro.kernels.dif_combine.dif_combine import dif_combine
-
     Aj = jnp.asarray(A)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
 
     def combine(phi: PyTree) -> PyTree:
-        buffers, unpack = pack_pytree(phi, block_m=block_m)
-        outs = [dif_combine(Aj, buf, block_m=block_m, interpret=interpret)
-                for buf in buffers]
-        return unpack(outs)
+        return _pallas_apply(Aj, phi, block_m=block_m, interpret=interpret)
 
     return combine
 
@@ -339,25 +337,68 @@ def combine_backends() -> tuple[str, ...]:
     return tuple(_BACKENDS)
 
 
+def _stepless(fn: Callable[[PyTree], PyTree]) -> CombineFn:
+    """Adapt a static combine to the ``(phi, step=None)`` surface."""
+
+    def combine(phi: PyTree, step=None) -> PyTree:
+        return fn(phi)
+
+    return combine
+
+
+def _stacked(Aj: jax.Array, apply: Callable[[jax.Array, PyTree], PyTree]
+             ) -> CombineFn:
+    """Index a stacked ``(S, K, K)`` schedule with the traced step, then
+    run ``apply(A_t, phi)`` — shared by every step-indexed backend."""
+    S = Aj.shape[0]
+
+    def combine(phi: PyTree, step=None) -> PyTree:
+        if step is None:
+            raise ValueError(
+                "a stacked matrix schedule needs the step index: call "
+                "combine(phi, step)")
+        At = jax.lax.dynamic_index_in_dim(Aj, jnp.mod(step, S),
+                                          keepdims=False)
+        return apply(At, phi)
+
+    return combine
+
+
+def _reject_stacked(A, name: str) -> np.ndarray:
+    A = np.asarray(A)
+    if A.ndim == 3:
+        raise ValueError(
+            f"combine backend {name!r} precomputes a per-offset permute "
+            f"schedule and cannot serve a stacked ({A.shape[0]}-step) matrix "
+            f"schedule; dynamic topologies need the 'dense' or 'pallas' "
+            f"backend")
+    return A
+
+
 @register_backend("dense")
 def _build_dense(*, A, **_ctx) -> CombineFn:
-    return functools.partial(dense_combine, jnp.asarray(A))
+    Aj = jnp.asarray(A)
+    if Aj.ndim == 3:
+        return _stacked(Aj, dense_combine)
+    return _stepless(functools.partial(dense_combine, Aj))
 
 
 @register_backend("sparse_host")
 def _build_sparse_host(*, A, **_ctx) -> CombineFn:
-    return functools.partial(sparse_combine_host, np.asarray(A))
+    return _stepless(functools.partial(
+        sparse_combine_host, _reject_stacked(A, "sparse_host")))
 
 
 @register_backend("sparse", needs_axis_name=True)
 def _build_sparse(*, A, axis_name, **_ctx) -> CombineFn:
-    return make_sparse_combine(np.asarray(A), axis_name)
+    return _stepless(make_sparse_combine(_reject_stacked(A, "sparse"),
+                                         axis_name))
 
 
 @register_backend("mesh_sparse", needs_mesh=True, needs_axis_name=True)
 def _build_mesh_sparse(*, A, mesh, axis_name, in_specs=None, **_ctx
                        ) -> CombineFn:
-    A = np.asarray(A)
+    A = _reject_stacked(A, "mesh_sparse")
     K = A.shape[0]
     extent = compat.mesh_axis_sizes(mesh).get(axis_name)
     if extent != K:
@@ -366,22 +407,42 @@ def _build_mesh_sparse(*, A, mesh, axis_name, in_specs=None, **_ctx
             f"extent {extent} but A is {K}x{K}. Use 'sparse_host' when the "
             f"agent axis spans multiple mesh axes (e.g. multi-pod data "
             f"placement).")
-    return make_mesh_sparse_combine(A, mesh, axis_name, in_specs=in_specs)
+    return _stepless(make_mesh_sparse_combine(A, mesh, axis_name,
+                                              in_specs=in_specs))
 
 
 @register_backend("pallas")
 def _build_pallas(*, A, block_m=512, interpret=None, **_ctx) -> CombineFn:
-    return make_pallas_combine(A, block_m=block_m, interpret=interpret)
+    Aj = jnp.asarray(A)
+    if Aj.ndim == 3:
+        return _stacked(Aj, functools.partial(_pallas_apply, block_m=block_m,
+                                              interpret=interpret))
+    return _stepless(make_pallas_combine(Aj, block_m=block_m,
+                                         interpret=interpret))
+
+
+def _pallas_apply(A: jax.Array, phi: PyTree, *, block_m: int = 512,
+                  interpret: bool | None = None) -> PyTree:
+    """One pallas combine against an already-selected (possibly traced)
+    matrix."""
+    from repro.kernels.dif_combine.dif_combine import dif_combine
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    buffers, unpack = pack_pytree(phi, block_m=block_m)
+    outs = [dif_combine(A, buf, block_m=block_m, interpret=interpret)
+            for buf in buffers]
+    return unpack(outs)
 
 
 @register_backend("centralized", needs_matrix=False)
 def _build_centralized(**_ctx) -> CombineFn:
-    return centralized_combine
+    return _stepless(centralized_combine)
 
 
 @register_backend("none", needs_matrix=False)
 def _build_none(**_ctx) -> CombineFn:
-    return no_combine
+    return _stepless(no_combine)
 
 
 def select_backend(A: np.ndarray | None, *, mesh=None,
@@ -391,6 +452,10 @@ def select_backend(A: np.ndarray | None, *, mesh=None,
     if A is None:
         return "dense"
     A = np.asarray(A)
+    if A.ndim == 3:
+        # stacked per-step schedule: only the step-indexed dense einsum
+        # serves arbitrary per-step graphs under jit
+        return "dense"
     K = A.shape[0]
     if K == 1:
         return "none"
@@ -409,6 +474,31 @@ def select_backend(A: np.ndarray | None, *, mesh=None,
     return "dense"
 
 
+# Backends able to index a stacked (S, K, K) schedule with the traced step.
+_STEP_INDEXED_BACKENDS = ("dense", "pallas")
+
+
+def resolve_schedule_backend(backend: str, A) -> str:
+    """Downgrade ``backend`` to 'dense' when ``A`` is a stacked schedule the
+    backend cannot step-index ('auto' resolves itself in
+    :func:`select_backend`).  The single owner of the capability list —
+    trainer and launch both route through here.  The downgrade is loud: a
+    sparse backend was chosen for its O(deg·|w|) wire cost, and the dense
+    einsum gives that up."""
+    if (backend != "auto" and A is not None
+            and np.asarray(A).ndim == 3
+            and backend not in _STEP_INDEXED_BACKENDS):
+        import warnings
+        warnings.warn(
+            f"combine backend {backend!r} cannot step-index a stacked "
+            f"({np.asarray(A).shape[0]}-step) matrix schedule; falling back "
+            f"to 'dense' — collective bytes rise from O(deg·|w|) to "
+            f"O(K·|w|). Use a static schedule to keep {backend!r}.",
+            RuntimeWarning, stacklevel=3)
+        return "dense"
+    return backend
+
+
 def make_combine(strategy: str, A: np.ndarray | None = None,
                  axis_name: str | None = None, *, mesh=None,
                  in_specs: PyTree | None = None, block_m: int = 512,
@@ -417,6 +507,11 @@ def make_combine(strategy: str, A: np.ndarray | None = None,
 
     ``strategy``: 'auto' | any :func:`combine_backends` name.  'auto'
     resolves via :func:`select_backend`.
+
+    ``A`` may be one ``(K, K)`` matrix or a stacked ``(S, K, K)`` schedule
+    (see :class:`repro.core.topology.TopologySchedule`); stacked schedules
+    are served by the 'dense'/'pallas' backends, which index the stack with
+    the step passed to ``combine(phi, step)``.
     """
     if strategy == "auto":
         strategy = select_backend(A, mesh=mesh, axis_name=axis_name)

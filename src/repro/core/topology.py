@@ -1,4 +1,5 @@
-"""Graph topologies and doubly-stochastic combination matrices.
+"""Graph topologies, doubly-stochastic combination matrices, and
+per-step communication-graph schedules.
 
 The combination matrix ``A = [a_{lk}]`` weights how agent ``k`` combines the
 intermediate states of its neighbors ``l`` (paper eq. 6b).  Column ``k`` of
@@ -6,8 +7,39 @@ intermediate states of its neighbors ``l`` (paper eq. 6b).  Column ``k`` of
 requires ``A`` doubly stochastic and primitive; the Metropolis(-Hastings)
 rule below satisfies both for any connected undirected graph with at least
 one self-loop weight > 0.
+
+Two object layers sit on top of the raw edge/matrix helpers:
+
+:class:`Topology`
+    one named graph instance — K, the edge set, the combination rule, the
+    matrix, and the spectral diagnostics (``mixing_rate``, connectivity,
+    double stochasticity) Thm 1 reasons about.
+
+:class:`TopologySchedule`
+    *who mixes with whom at step i*: a stacked ``(S, K, K)`` array of
+    per-step combination matrices, cycled with period ``S``.  The stack is
+    precomputed on the host so dynamic graphs stay jit-compatible — the
+    combine backend indexes the stack with the traced step counter instead
+    of re-tracing per graph.  Kinds (:data:`SCHEDULES`):
+
+    ``static``        every step uses the topology's matrix (S = 1)
+    ``link_failure``  each edge drops i.i.d. with probability ``p`` per
+                      step; weights are re-derived on the surviving
+                      subgraph, so every per-step matrix stays doubly
+                      stochastic (a pre-sampled period of ``period`` draws
+                      is cycled)
+    ``gossip``        randomized gossip: one uniformly-drawn edge per step
+                      performs a pairwise half-half exchange, everyone
+                      else holds (Boyd et al. 2006 flavor)
+    ``round_robin``   deterministic matchings: the edge set is greedily
+                      colored so no two edges in a round share an agent;
+                      round ``i mod S`` activates one matching, covering
+                      every edge once per period
 """
 from __future__ import annotations
+
+import dataclasses
+import functools
 
 import numpy as np
 
@@ -25,6 +57,12 @@ __all__ = [
     "is_doubly_stochastic",
     "is_primitive",
     "neighbor_lists",
+    "Topology",
+    "build_topology",
+    "TopologySchedule",
+    "make_schedule",
+    "SCHEDULES",
+    "FIXED_SIZE",
 ]
 
 
@@ -92,6 +130,28 @@ TOPOLOGIES = {
     "paper": lambda K, **kw: paper_fig2a_edges(),
 }
 
+# Graphs with a hard-wired agent count: requesting any other K would either
+# index out of range or silently leave isolated agents, so edge construction
+# validates eagerly (see ``_edges_for``).
+FIXED_SIZE = {"paper": 6}
+
+
+def _check_name(topology: str) -> None:
+    if topology not in TOPOLOGIES:
+        raise ValueError(f"unknown topology {topology!r}; "
+                         f"available: {tuple(TOPOLOGIES)}")
+
+
+def _edges_for(K: int, topology: str, **kw) -> list[tuple[int, int]]:
+    _check_name(topology)
+    fixed = FIXED_SIZE.get(topology)
+    if fixed is not None and K != fixed:
+        raise ValueError(
+            f"topology {topology!r} is a fixed {fixed}-agent graph but "
+            f"num_agents={K}; run with {fixed} agents or pick a sized "
+            f"topology ({tuple(t for t in TOPOLOGIES if t not in FIXED_SIZE)})")
+    return TOPOLOGIES[topology](K, **kw)
+
 
 def _factor(K: int) -> tuple[int, int]:
     r = int(np.sqrt(K))
@@ -149,13 +209,22 @@ def uniform_weights(K: int, edges) -> np.ndarray:
     return A
 
 
+def _rule_fn(rule: str):
+    if rule == "metropolis":
+        return metropolis_weights
+    if rule == "uniform":
+        return uniform_weights
+    raise ValueError(f"unknown combination rule {rule!r}; "
+                     f"available: ('metropolis', 'uniform')")
+
+
 def combination_matrix(K: int, topology: str = "ring", rule: str = "metropolis",
                        **kw) -> np.ndarray:
-    edges = TOPOLOGIES[topology](K, **kw)
+    fn = _rule_fn(rule)          # validate even on the K=1 degenerate path
+    _check_name(topology)        # so a typo never runs green at K=1
     if K == 1:
         return np.ones((1, 1))
-    fn = metropolis_weights if rule == "metropolis" else uniform_weights
-    return fn(K, edges)
+    return fn(K, _edges_for(K, topology, **kw))
 
 
 # ---------------------------------------------------------------------------
@@ -215,3 +284,200 @@ def is_circulant(A: np.ndarray, tol: float = 1e-12) -> bool:
         if not np.allclose(np.roll(first, k), A[:, k], atol=tol):
             return False
     return True
+
+
+# ---------------------------------------------------------------------------
+# Topology: one named graph instance with its matrix + diagnostics
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A named communication graph: K agents, an undirected edge set, and
+    the combination rule that turns it into a doubly-stochastic matrix."""
+
+    name: str
+    K: int
+    edges: tuple[tuple[int, int], ...]
+    rule: str = "metropolis"
+
+    @functools.cached_property
+    def matrix(self) -> np.ndarray:
+        if self.K == 1:
+            return np.ones((1, 1))
+        return _rule_fn(self.rule)(self.K, list(self.edges))
+
+    @functools.cached_property
+    def mixing_rate(self) -> float:
+        """λ₂ — the linear agreement rate of Thm 1."""
+        return mixing_rate(self.matrix)
+
+    @property
+    def connected(self) -> bool:
+        return _connected(self.K, list(self.edges))
+
+    @property
+    def max_degree(self) -> int:
+        deg = np.zeros(self.K, dtype=int)
+        for l, k in self.edges:
+            deg[l] += 1
+            deg[k] += 1
+        return int(deg.max()) if self.K else 0
+
+    def diagnostics(self) -> dict:
+        """Spectral/structural summary (benchmark + run-log reporting)."""
+        A = self.matrix
+        return {
+            "name": self.name,
+            "K": self.K,
+            "edges": len(self.edges),
+            "rule": self.rule,
+            "mixing_rate": self.mixing_rate,
+            "doubly_stochastic": is_doubly_stochastic(A),
+            "primitive": is_primitive(A),
+            "connected": self.connected,
+        }
+
+
+def build_topology(name: str, K: int, rule: str = "metropolis",
+                   **kw) -> Topology:
+    """Construct a :class:`Topology`, validating K against fixed-size graphs
+    eagerly (a 'paper' graph with ``--agents 4`` fails here with both
+    numbers, not later with a shape error)."""
+    _rule_fn(rule)           # validate the rule name eagerly too
+    _check_name(name)
+    edges = _edges_for(K, name, **kw) if K > 1 else []
+    return Topology(name=name, K=K, edges=tuple(edges), rule=rule)
+
+
+# ---------------------------------------------------------------------------
+# TopologySchedule: who mixes with whom at step i, as a stacked matrix array
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TopologySchedule:
+    """A periodic sequence of combination matrices.
+
+    ``matrices`` is ``(S, K, K)``; step ``i`` uses ``matrices[i % S]``.
+    Every entry is doubly stochastic by construction, so the centroid is
+    invariant at every step (the Thm 2 mechanism survives dynamic graphs).
+    ``stacked()`` feeds :func:`repro.core.diffusion.make_combine` — the
+    backend indexes the stack with the traced step counter, keeping dynamic
+    graphs inside one jit-compiled step function.
+    """
+
+    kind: str
+    topology: Topology
+    matrices: np.ndarray
+
+    @property
+    def period(self) -> int:
+        return self.matrices.shape[0]
+
+    @property
+    def static(self) -> bool:
+        return self.period == 1
+
+    def matrix_at(self, step: int) -> np.ndarray:
+        return self.matrices[step % self.period]
+
+    def stacked(self) -> np.ndarray:
+        """The array handed to the combine backend: ``(K, K)`` for a static
+        schedule (so sparse/mesh backends stay eligible), ``(S, K, K)``
+        otherwise."""
+        return self.matrices[0] if self.static else self.matrices
+
+    @functools.cached_property
+    def mean_matrix(self) -> np.ndarray:
+        """E[A] over the period — its λ₂ is the *expected* per-step
+        contraction a random schedule achieves (Boyd et al. 2006)."""
+        return self.matrices.mean(axis=0)
+
+    @property
+    def mean_mixing_rate(self) -> float:
+        return mixing_rate(self.mean_matrix)
+
+
+def _static_schedule(topo: Topology, **kw) -> np.ndarray:
+    return topo.matrix[None]
+
+
+def _link_failure_schedule(topo: Topology, p: float = 0.2, period: int = 64,
+                           seed: int = 0, **kw) -> np.ndarray:
+    """Each edge drops i.i.d. with probability ``p`` at each step; the
+    combination rule is re-applied to the surviving subgraph so every
+    per-step matrix is doubly stochastic (a disconnected instant is fine —
+    agreement only needs the *sequence* to mix)."""
+    if not 0.0 <= p <= 1.0:
+        raise ValueError(f"link-failure probability must be in [0, 1], got {p}")
+    rng = np.random.default_rng(seed)
+    fn = _rule_fn(topo.rule)
+    mats = []
+    for _ in range(period):
+        alive = [e for e in topo.edges if rng.random() >= p]
+        mats.append(fn(topo.K, alive) if alive else np.eye(topo.K))
+    return np.stack(mats)
+
+
+def _gossip_schedule(topo: Topology, period: int = 64, seed: int = 0,
+                     **kw) -> np.ndarray:
+    """Randomized gossip: one uniformly-drawn edge per step does a
+    half-half pairwise exchange; all other agents hold their state."""
+    if not topo.edges:
+        return np.eye(topo.K)[None]
+    rng = np.random.default_rng(seed)
+    mats = []
+    for _ in range(period):
+        l, k = topo.edges[rng.integers(len(topo.edges))]
+        A = np.eye(topo.K)
+        A[l, l] = A[k, k] = A[l, k] = A[k, l] = 0.5
+        mats.append(A)
+    return np.stack(mats)
+
+
+def _round_robin_schedule(topo: Topology, **kw) -> np.ndarray:
+    """Deterministic matchings via greedy edge coloring: each round's edges
+    share no agent, so each round is a disjoint set of pairwise half-half
+    exchanges; the full edge set is covered once per period."""
+    if not topo.edges:
+        return np.eye(topo.K)[None]
+    rounds: list[list[tuple[int, int]]] = []
+    busy: list[set[int]] = []
+    for e in topo.edges:
+        for r, members in enumerate(busy):
+            if e[0] not in members and e[1] not in members:
+                rounds[r].append(e)
+                members.update(e)
+                break
+        else:
+            rounds.append([e])
+            busy.append(set(e))
+    mats = []
+    for matching in rounds:
+        A = np.eye(topo.K)
+        for l, k in matching:
+            A[l, l] = A[k, k] = A[l, k] = A[k, l] = 0.5
+        mats.append(A)
+    return np.stack(mats)
+
+
+SCHEDULES = {
+    "static": _static_schedule,
+    "link_failure": _link_failure_schedule,
+    "gossip": _gossip_schedule,
+    "round_robin": _round_robin_schedule,
+}
+
+
+def make_schedule(kind: str, topo: Topology, **kw) -> TopologySchedule:
+    """Build a :class:`TopologySchedule` of the registered ``kind``.
+
+    Keyword args are schedule-specific: ``p``/``period``/``seed`` for
+    ``link_failure``, ``period``/``seed`` for ``gossip``; ``static`` and
+    ``round_robin`` take none.
+    """
+    if kind not in SCHEDULES:
+        raise ValueError(f"unknown topology schedule {kind!r}; "
+                         f"available: {tuple(SCHEDULES)}")
+    if topo.K == 1:
+        return TopologySchedule(kind, topo, np.ones((1, 1, 1)))
+    return TopologySchedule(kind, topo, SCHEDULES[kind](topo, **kw))

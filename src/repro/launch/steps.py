@@ -14,8 +14,10 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES
-from repro.core import MetaConfig, diffusion, maml, topology
-from repro.core.meta_trainer import TrainState, make_meta_step
+from repro.core import (MetaConfig, TopologyConfig, UpdateConfig, diffusion,
+                        update)
+from repro.core.meta_trainer import (TrainState, make_meta_step, schedule_for,
+                                     strategy_for_combine)
 from repro.models.init import Spec, abstract, axes_tree, with_agent_axis
 from repro.models.transformer import build_model
 from repro.optim import get_optimizer
@@ -167,18 +169,32 @@ def input_axes(cfg: ArchConfig, shape_name: str) -> dict[str, Any]:
 # Train step (Dif-MAML meta-iteration)
 # ---------------------------------------------------------------------------
 
-def meta_config_for(cfg: ArchConfig, K: int, T: int) -> MetaConfig:
+def meta_config_for(cfg: ArchConfig, K: int, T: int, *,
+                    strategy: str | None = None,
+                    schedule: str = "static",
+                    link_failure_p: float = 0.2,
+                    schedule_seed: int = 0) -> MetaConfig:
+    """Assemble the nested MetaConfig from the arch's meta fields plus the
+    run's strategy/schedule choices (``--strategy``/``--topology-schedule``
+    in launch/train.py)."""
+    if K == 1:
+        strategy, backend = "none", "none"
+    else:
+        strategy, backend = strategy or "atc", cfg.combine
     return MetaConfig(
         num_agents=K,
         tasks_per_agent=T,
         inner_lr=cfg.inner_lr,
         inner_steps=cfg.inner_steps,
-        mode=cfg.meta_mode,
-        combine=cfg.combine if K > 1 else "none",
-        topology=cfg.topology,
         outer_optimizer=cfg.outer_optimizer,
         outer_lr=cfg.outer_lr,
         hvp_subsample=cfg.hvp_subsample,
+        update_config=UpdateConfig(strategy=strategy, inner=cfg.meta_mode,
+                                   backend=backend),
+        topology_config=TopologyConfig(graph=cfg.topology,
+                                       schedule=schedule,
+                                       link_failure_p=link_failure_p,
+                                       seed=schedule_seed),
     )
 
 
@@ -195,6 +211,8 @@ class TrainBundle:
     batch_shardings: Any
     init_state: Any               # () -> TrainState (materialized)
     loss_fn: Any = None           # (params, batch) -> scalar (single agent)
+    mcfg: Any = None              # the assembled MetaConfig
+    schedule: Any = None          # TopologySchedule (None when K == 1)
 
     def make_eval_harness(self, inner_steps: int | None = None):
         """The in-training recurring-vs-unseen eval engine, bound to this
@@ -258,7 +276,11 @@ def opt_state_axes(opt_name: str, params_axes: PyTree) -> PyTree:
 
 
 def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
-                combine_override: str | None = None) -> TrainBundle:
+                combine_override: str | None = None, *,
+                strategy: str | None = None,
+                schedule: str = "static",
+                link_failure_p: float = 0.2,
+                schedule_seed: int = 0) -> TrainBundle:
     shape = INPUT_SHAPES[shape_name]
     assert shape.kind in ("train", "prefill")
     dt = DTYPES[cfg.dtype]
@@ -269,12 +291,21 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
         model.act_sharding = NamedSharding(mesh, P("data", None, None))
     K = agent_count(cfg, mesh)
     T, tb = batch_geometry(cfg, shape, K)
-    mcfg = meta_config_for(cfg, K, T)
+    mcfg = meta_config_for(cfg, K, T, strategy=strategy, schedule=schedule,
+                           link_failure_p=link_failure_p,
+                           schedule_seed=schedule_seed)
     if combine_override:
-        mcfg = dataclasses.replace(mcfg, combine=combine_override)
+        # a bare 'none'/'centralized' override keeps the legacy meaning of
+        # selecting that *strategy* (unless one was requested explicitly)
+        uc = mcfg.update_config
+        strat = (uc.strategy if strategy
+                 else strategy_for_combine(combine_override,
+                                           default=uc.strategy))
+        mcfg = dataclasses.replace(mcfg, update_config=dataclasses.replace(
+            uc, strategy=strat, backend=combine_override))
     opt = get_optimizer(cfg.outer_optimizer, cfg.outer_lr)
-    A = (topology.combination_matrix(K, cfg.topology) if K > 1
-         else np.ones((1, 1)))
+    sched = schedule_for(mcfg) if K > 1 else None
+    A = sched.stacked() if sched is not None else np.ones((1, 1))
 
     # ---- shardings (needed below for the sparse combine's in_specs) -------
     rules = rules_for(cfg, mesh, kind="train")
@@ -285,8 +316,10 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
 
     multi_pod = "pod" in mesh.axis_names
     agent_axis = "pod" if (cfg.placement == "pod" and multi_pod) else "data"
-    strategy = mcfg.combine if K > 1 else "none"
-    if strategy == "sparse":
+    strat_obj = update.get_strategy(
+        mcfg.update_config.strategy if K > 1 else "none")
+    backend = mcfg.update_config.backend
+    if backend == "sparse":
         # Sparse neighbor combine: weighted rolls over the agent axis.
         # Under GSPMD a roll on the agent-sharded dim lowers to
         # collective-permutes of one shard per circular offset, while every
@@ -294,12 +327,13 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
         # whose in_specs omit the auto axes would instead all-gather TP
         # shards at entry (measured +77% wire).  'mesh_sparse' stays
         # selectable because build_train passes the real leaf specs below.
-        strategy = "sparse_host"
+        backend = "sparse_host"
+    backend = diffusion.resolve_schedule_backend(backend, A)
     combine_fn = None
-    if strategy != "none":
+    if strat_obj.needs_combine_fn and K > 1:
         param_specs = jax.tree.map(lambda s: s.spec, params_sh)
         combine_fn = diffusion.make_combine(
-            strategy, A=A, axis_name=agent_axis, mesh=mesh,
+            backend, A=A, axis_name=agent_axis, mesh=mesh,
             in_specs=param_specs)
     freeze_mask = None
     if cfg.inner_freeze:
@@ -338,7 +372,8 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
         return TrainState(jnp.zeros((), jnp.int32), params, opt.init(params))
 
     return TrainBundle(cfg, mesh, K, T, tb, train_step, state_abs, state_sh,
-                       batch_sh, init_state_fn, loss_fn=model.loss_fn)
+                       batch_sh, init_state_fn, loss_fn=model.loss_fn,
+                       mcfg=mcfg, schedule=sched)
 
 
 # ---------------------------------------------------------------------------

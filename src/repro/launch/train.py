@@ -28,6 +28,7 @@ import jax
 from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
 from repro.configs import INPUT_SHAPES, get_config
 from repro.configs.base import InputShape
+from repro.core import topology, update
 from repro.data.lm_tasks import LMTaskSource
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch import steps as S
@@ -105,6 +106,18 @@ def main() -> None:
     ap.add_argument("--combine", default=None,
                     help="combine backend override: 'auto' or any "
                          "diffusion.combine_backends() name")
+    ap.add_argument("--strategy", default=None,
+                    choices=sorted(update.update_strategies()),
+                    help="outer-update composition (default atc, paper "
+                         "Algorithm 1): how the combine composes with the "
+                         "local meta-update")
+    ap.add_argument("--topology-schedule", default="static",
+                    choices=sorted(topology.SCHEDULES),
+                    help="per-step communication-graph schedule over the "
+                         "arch's topology")
+    ap.add_argument("--link-failure-p", type=float, default=0.2,
+                    help="i.i.d. per-edge drop probability for "
+                         "--topology-schedule link_failure")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -128,10 +141,22 @@ def main() -> None:
 
     with mesh:
         bundle = S.build_train(cfg, mesh, shape_name,
-                               combine_override=args.combine)
+                               combine_override=args.combine,
+                               strategy=args.strategy,
+                               schedule=args.topology_schedule,
+                               link_failure_p=args.link_failure_p,
+                               schedule_seed=args.seed)
+        ucfg = bundle.mcfg.update_config
+        sched = bundle.schedule
         print(f"[train] {cfg.name}: K={bundle.K} agents, "
               f"T={bundle.T} tasks × {bundle.tb} examples, "
-              f"mode={cfg.meta_mode}, seed={args.seed}")
+              f"mode={ucfg.inner}, seed={args.seed}")
+        if sched is not None:
+            print(f"[train] outer update: strategy={ucfg.strategy} over "
+                  f"'{sched.topology.name}' ({sched.kind} schedule, "
+                  f"period {sched.period}, "
+                  f"mean λ₂={sched.mean_mixing_rate:.3f}), "
+                  f"combine_every={ucfg.combine_every}")
         state = bundle.init_state(seed=args.seed)
         if resuming:
             state = restore_checkpoint(ckpt_dir, state)
@@ -153,7 +178,12 @@ def main() -> None:
                   f"-> {log_path}")
         run_log.write(kind="config", arch=cfg.name, seed=args.seed,
                       K=bundle.K, T=bundle.T, tb=bundle.tb,
-                      mode=cfg.meta_mode, steps=args.steps,
+                      mode=ucfg.inner, strategy=ucfg.strategy,
+                      topology_schedule=args.topology_schedule,
+                      link_failure_p=(args.link_failure_p
+                                      if args.topology_schedule
+                                      == "link_failure" else None),
+                      steps=args.steps,
                       n_domains=source.n_domains,
                       holdout_domains=source.holdout_domains)
         t0 = time.time()

@@ -82,3 +82,137 @@ def test_contraction_bound(K):
     x -= x.mean(axis=0, keepdims=True)
     y = A.T @ x
     assert np.linalg.norm(y) <= lam2 * np.linalg.norm(x) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Full TOPOLOGIES × rules invariant grid (Assumption 6 for every entry)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo", sorted(T.TOPOLOGIES))
+@pytest.mark.parametrize("rule", ["metropolis", "uniform"])
+def test_every_topology_rule_satisfies_assumption6(topo, rule):
+    K = T.FIXED_SIZE.get(topo, 12)
+    A = T.combination_matrix(K, topo, rule=rule)
+    assert T.is_doubly_stochastic(A)
+    assert T.is_primitive(A)
+    t = T.build_topology(topo, K, rule)
+    assert t.connected
+    assert 0.0 <= t.mixing_rate < 1.0
+    np.testing.assert_allclose(t.matrix, A)
+    d = t.diagnostics()
+    assert d["doubly_stochastic"] and d["primitive"] and d["connected"]
+
+
+def test_erdos_deterministic_for_fixed_seed():
+    a = T.combination_matrix(24, "erdos", seed=7)
+    b = T.combination_matrix(24, "erdos", seed=7)
+    np.testing.assert_array_equal(a, b)
+    c = T.combination_matrix(24, "erdos", seed=8)
+    assert not np.array_equal(a, c)
+
+
+def test_fixed_size_topology_rejects_mismatched_agents():
+    with pytest.raises(ValueError) as ei:
+        T.combination_matrix(4, "paper")
+    msg = str(ei.value)
+    assert "paper" in msg and "4" in msg and "6" in msg
+    with pytest.raises(ValueError):
+        T.build_topology("paper", 12)
+    # exact size still works
+    assert T.build_topology("paper", 6).matrix.shape == (6, 6)
+
+
+def test_unknown_topology_and_rule_fail_loudly():
+    with pytest.raises(ValueError, match="unknown topology"):
+        T.combination_matrix(4, "hypercube")
+    with pytest.raises(ValueError, match="rule"):
+        T.combination_matrix(4, "ring", rule="perron")
+
+
+# ---------------------------------------------------------------------------
+# TopologySchedules: per-step matrices keep the combine contract
+# ---------------------------------------------------------------------------
+
+def _sched(kind, K=6, topo="ring", **kw):
+    return T.make_schedule(kind, T.build_topology(topo, K), **kw)
+
+
+@pytest.mark.parametrize("kind", sorted(T.SCHEDULES))
+def test_schedule_matrices_all_doubly_stochastic(kind):
+    s = _sched(kind, **({"p": 0.3, "period": 16}
+                        if kind == "link_failure" else {}))
+    assert s.matrices.ndim == 3
+    for A in s.matrices:
+        assert T.is_doubly_stochastic(A)
+    assert T.is_doubly_stochastic(s.mean_matrix)
+
+
+def test_static_schedule_is_the_base_matrix():
+    s = _sched("static")
+    assert s.static and s.period == 1
+    np.testing.assert_allclose(s.stacked(), T.combination_matrix(6, "ring"))
+    assert s.stacked().ndim == 2        # sparse/mesh backends stay eligible
+
+
+def test_link_failure_limits():
+    base = T.combination_matrix(6, "ring")
+    s0 = _sched("link_failure", p=0.0, period=4)
+    for A in s0.matrices:
+        np.testing.assert_allclose(A, base)
+    s1 = _sched("link_failure", p=1.0, period=4)
+    for A in s1.matrices:
+        np.testing.assert_allclose(A, np.eye(6))
+    # deterministic for a fixed seed; p strictly between: some variation
+    sa = _sched("link_failure", p=0.4, period=16, seed=5)
+    sb = _sched("link_failure", p=0.4, period=16, seed=5)
+    np.testing.assert_array_equal(sa.matrices, sb.matrices)
+    assert any(not np.allclose(A, base) for A in sa.matrices)
+
+
+def test_gossip_is_single_pairwise_exchange():
+    s = _sched("gossip", period=32, seed=1)
+    edges = set(T.build_topology("ring", 6).edges)
+    for A in s.matrices:
+        off = np.argwhere((A > 0) & ~np.eye(6, dtype=bool))
+        assert len(off) == 2                     # one symmetric pair
+        l, k = sorted(off[0])
+        assert (l, k) in edges
+        assert A[l, k] == 0.5
+    # over the period every edge should appear at least once (6 edges, 32 draws)
+    seen = {tuple(sorted(np.argwhere((A > 0) & ~np.eye(6, dtype=bool))[0]))
+            for A in s.matrices}
+    assert seen == edges
+
+
+def test_round_robin_is_matchings_covering_all_edges():
+    t = T.build_topology("paper", 6)
+    s = T.make_schedule("round_robin", t)
+    covered = set()
+    for A in s.matrices:
+        off = {tuple(sorted(e)) for e in
+               map(tuple, np.argwhere((A > 0) & ~np.eye(6, dtype=bool)))}
+        # matching: no agent appears in two active edges of one round
+        agents = [a for e in off for a in e]
+        assert len(agents) == len(set(agents))
+        covered |= off
+    assert covered == {tuple(sorted(e)) for e in t.edges}
+
+
+def test_schedule_mean_mixing_rate_orders_kinds():
+    """Static ring mixes faster in expectation than its failing/gossip
+    variants (fewer active links per step ⇒ weaker expected contraction)."""
+    static = _sched("static")
+    lossy = _sched("link_failure", p=0.5, period=64)
+    gossip = _sched("gossip", period=64)
+    assert static.mean_mixing_rate < lossy.mean_mixing_rate
+    assert static.mean_mixing_rate < gossip.mean_mixing_rate
+
+
+def test_make_schedule_unknown_kind():
+    with pytest.raises(ValueError, match="unknown topology schedule"):
+        _sched("adaptive")
+
+
+def test_schedule_k1_degenerates():
+    s = T.make_schedule("gossip", T.build_topology("ring", 1))
+    assert s.matrices.shape == (1, 1, 1)
