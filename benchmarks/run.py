@@ -42,13 +42,20 @@ def emit(name: str, us: float, derived: str, detail: dict | None = None):
             json.dump(detail, f, indent=1)
 
 
-def _timed(fn, *args, reps=3):
-    fn(*args)                                   # compile
-    t0 = time.perf_counter()
+def _timed(fn, *args, reps=5):
+    """Median-of-reps wall time (us) with a per-rep ``block_until_ready``.
+
+    The old mean-with-one-trailing-block protocol had two failure modes on
+    2-vCPU CI: async dispatch let reps overlap (the loop timed enqueue, not
+    execution, for all but the last rep) and a single noisy rep skewed the
+    mean.  Blocking each rep and taking the median fixes both."""
+    jax.block_until_ready(fn(*args))            # compile + warm caches
+    ts = []
     for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
 
 
 # ---------------------------------------------------------------------------
@@ -306,6 +313,157 @@ def bench_combine_strategies(quick: bool):
         err = max(float(jnp.max(jnp.abs(a - b)))
                   for a, b in zip(ref, jax.tree.leaves(outs[name])))
         emit(f"combine_{name}_equals_dense", 0.0, f"max_err={err:.2e}")
+
+
+# Runs under 8 forced host devices in a subprocess (the parent process owns
+# a single-device jax runtime): lowers the dense-stacked and the
+# mesh_sparse_dynamic combine for each dynamic schedule × topology, reads
+# collective wire bytes off the optimized HLO (launch/hlo_cost.py), and
+# times both with the median-of-reps protocol.
+_DYNAMIC_COMBINE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import json, sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import compat
+from repro.core import diffusion, topology
+from repro.launch.hlo_cost import HloCost
+from benchmarks.run import _timed as timed   # ONE timing protocol
+
+K = 8
+M = int(sys.argv[1])
+mesh = compat.make_mesh((K,), ("data",))
+phi = {"w": jax.random.normal(jax.random.key(0), (K, M), jnp.float32)}
+sh = NamedSharding(mesh, P("data", None))
+phi_sh = {"w": jax.device_put(phi["w"], sh)}
+step0 = jnp.zeros((), jnp.int32)
+
+out = {}
+with mesh:
+    for topo_name in ["ring", "full"]:
+        topo = topology.build_topology(topo_name, K)
+        for kind, kw in [("link_failure", dict(p=0.3, period=16, seed=0)),
+                         ("gossip", dict(period=16, seed=0)),
+                         ("round_robin", {})]:
+            sched = topology.make_schedule(kind, topo, **kw)
+            stack = sched.matrices           # always (S, K, K)
+            dense = jax.jit(diffusion.make_combine("dense", A=stack))
+            dyn = jax.jit(diffusion.make_combine(
+                "mesh_sparse_dynamic", A=stack, mesh=mesh,
+                axis_name="data", in_specs={"w": P("data", None)}))
+            rec = {"period": sched.period, "deg": sched.ir().degree}
+            for name, fn in [("dense", dense), ("sparse_dynamic", dyn)]:
+                txt = fn.lower(phi_sh, step0).compile().as_text()
+                coll = HloCost(txt, n_dev=K).collectives()
+                rec[name] = {"wire_bytes": coll["total_bytes"],
+                             "collectives": coll["total_count"],
+                             "us": timed(fn, phi_sh, step0)}
+            s = jnp.int32(3)
+            err = jnp.max(jnp.abs(dense(phi_sh, s)["w"] - dyn(phi_sh, s)["w"]))
+            rec["max_err"] = float(err)
+            out[kind + "_" + topo_name] = rec
+print("BENCH_JSON:" + json.dumps(out))
+"""
+
+
+def bench_combine_dynamic(quick: bool):
+    """Dynamic-schedule combine: collective wire bytes (HLO-verified) and
+    wall time, dense-stacked step-indexed einsum vs the sparse_dynamic
+    ppermute lowering, per schedule × {ring, full} at K=8 on an 8-shard
+    agent mesh.  On ring (deg 2) the sparse path must move ≤ (deg+1)/K of
+    the dense bytes per combine — the acceptance row CI records."""
+    import subprocess
+    M = 1 << 13 if quick else 1 << 15
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", _DYNAMIC_COMBINE_SCRIPT, str(M)],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."), timeout=1200)
+    lines = [l for l in res.stdout.splitlines()
+             if l.startswith("BENCH_JSON:")]
+    if not lines:
+        raise RuntimeError(
+            f"combine_dynamic subprocess failed:\n{res.stderr[-2000:]}")
+    data = json.loads(lines[0][len("BENCH_JSON:"):])
+    for name, rec in data.items():
+        dense, sp = rec["dense"], rec["sparse_dynamic"]
+        ratio = sp["wire_bytes"] / max(dense["wire_bytes"], 1)
+        emit(f"combine_dynamic_{name}", sp["us"],
+             f"dense_us={dense['us']:.1f};"
+             f"wire_sparse={sp['wire_bytes']};wire_dense={dense['wire_bytes']};"
+             f"bytes_ratio={ratio:.3f};deg={rec['deg']};K=8;"
+             f"max_err={rec['max_err']:.2e}")
+    ring = data["link_failure_ring"]
+    ring_ratio = (ring["sparse_dynamic"]["wire_bytes"]
+                  / max(ring["dense"]["wire_bytes"], 1))
+    emit("combine_dynamic_summary", 0.0,
+         f"ring_bytes_ratio={ring_ratio:.3f};"
+         f"bound_deg_plus_1_over_K={(ring['deg'] + 1) / 8:.3f};"
+         f"ring_within_bound={ring_ratio <= (ring['deg'] + 1) / 8}",
+         detail=data)
+
+
+def bench_superstep(quick: bool):
+    """Dispatch-free training loop: steps/sec of the superstep driver at
+    C=1 (one jitted dispatch + one host metric fetch per step — the legacy
+    loop's behavior) vs C=8 (one per 8 steps).  On dispatch-bound hardware
+    the win is the Python/sync overhead times (C−1)/C."""
+    from repro.configs.base import ArchConfig, INPUT_SHAPES, InputShape
+    from repro.data import LMTaskSource
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch import steps as S
+
+    seq, gb = 32, 8
+    cfg = ArchConfig(name="superstep-bench", arch_type="dense", num_layers=1,
+                     d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                     d_ff=64, vocab_size=256, meta_mode="fomaml",
+                     topology="ring", outer_optimizer="adam",
+                     dtype="float32", remat=False, attn_q_chunk=None,
+                     meta_tasks=2)
+    INPUT_SHAPES["superstep_bench"] = InputShape("superstep_bench", seq, gb,
+                                                 "train")
+    try:
+        mesh = make_host_mesh(data=min(4, len(jax.devices())))
+        with mesh:
+            bundle = S.build_train(cfg, mesh, "superstep_bench")
+            source = LMTaskSource(vocab_size=cfg.padded_vocab, seq_len=seq,
+                                  K=bundle.K, tasks_per_agent=bundle.T,
+                                  task_batch=bundle.tb, n_domains=8, seed=0)
+            superstep = S.make_superstep(bundle.step_fn)
+            fns = {C: jax.jit(superstep, donate_argnums=(0,))
+                   for C in (1, 8)}
+            n_steps = 32 if quick else 64
+
+            def run(C):
+                fn = fns[C]
+                st = bundle.init_state(seed=0)
+                with bundle.make_pipeline(source, depth=2, stack=C) as pipe:
+                    for _ in range(2):           # compile + warm caches
+                        st, m = fn(st, next(pipe))
+                    jax.device_get(m)
+                    t0 = time.perf_counter()
+                    for _ in range(n_steps // C):
+                        st, m = fn(st, next(pipe))
+                        jax.device_get(m)        # per-dispatch host sync
+                    return (n_steps // C) / (time.perf_counter() - t0) * C
+
+            run(1)                               # process burn-in
+            r = {1: [], 8: []}
+            for _ in range(3 if quick else 5):   # alternate reps (2-vCPU
+                for C in (1, 8):                 # clock drift protocol)
+                    r[C].append(run(C))
+            sps = {C: float(np.median(v)) for C, v in r.items()}
+            emit("superstep", 1e6 / sps[8],
+                 f"steps_per_s_c8={sps[8]:.1f};steps_per_s_c1={sps[1]:.1f};"
+                 f"speedup={sps[8] / sps[1]:.2f}x",
+                 detail={"steps_per_s": {str(C): v for C, v in r.items()}})
+    finally:
+        del INPUT_SHAPES["superstep_bench"]
 
 
 def bench_kernels(quick: bool):
@@ -669,6 +827,8 @@ BENCHES = {
     "thm1": bench_thm1_agreement,
     "thm2": bench_thm2_stationarity,
     "combine": bench_combine_strategies,
+    "combine_dynamic": bench_combine_dynamic,
+    "superstep": bench_superstep,
     "kernels": bench_kernels,
     "generalization": bench_generalization_gap,
     "modes": bench_meta_modes,

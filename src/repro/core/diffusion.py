@@ -33,6 +33,26 @@ Registered backends
                  in a partial-manual shard_map over the agent mesh axis
                  (built via :mod:`repro.compat`, so it runs on jax 0.4.x
                  and >= 0.5 alike).  Requires jit.
+``sparse_host_dynamic``
+                 host-roll lowering of a *dynamic* (stacked ``(S, K, K)``)
+                 schedule via its :class:`repro.core.topology.ScheduleIR`:
+                 one weighted roll per offset in the period's offset
+                 *union*, with the per-step weight rows gathered by the
+                 traced step index.  Exact for every schedule kind
+                 (inactive offsets carry zero weights that step); under
+                 GSPMD each roll stays a collective-permute, so dynamic
+                 graphs keep O(deg·|w|) wire instead of the O(K·|w|) the
+                 dense step-indexed einsum pays.
+``sparse_dynamic``
+                 the same IR lowered to ``lax.ppermute`` rounds, to be
+                 called *inside* an existing shard_map/manual context
+                 (one-agent-per-shard); the permute set is fixed across
+                 steps — only the weight gather sees the step — so one
+                 jitted program serves the whole schedule.
+``mesh_sparse_dynamic``
+                 production dynamic combine: ``sparse_dynamic`` wrapped in
+                 a partial-manual shard_map over the agent mesh axis, step
+                 threaded in replicated.  Requires jit.
 ``pallas``       the fused :mod:`repro.kernels.dif_combine` TPU kernel:
                  one pass over the parameter bytes instead of K−1 separate
                  axpy passes.  Arbitrary parameter pytrees are served
@@ -50,13 +70,25 @@ Backend selection
 mesh and accelerator:
 
   1. K == 1                                  → ``none``
-  2. circular-offset-sparse A (deg < K−1) on a live mesh whose
+  2. stacked ``(S, K, K)`` schedule whose offset union is sparse
+     (deg < K−1): on a live mesh whose ``axis_name`` extent equals K
+     → ``mesh_sparse_dynamic``; otherwise    → ``sparse_host_dynamic``
+  3. stacked schedule with a dense offset union (e.g. gossip on the
+     full graph)                             → ``dense`` (step-indexed)
+  4. circular-offset-sparse static A (deg < K−1) on a live mesh whose
      ``axis_name`` extent equals K           → ``mesh_sparse``
-  3. circular-offset-sparse A, no mesh       → ``sparse_host``
-  4. dense A, no mesh, TPU backend           → ``pallas``
+  5. circular-offset-sparse static A, no mesh → ``sparse_host``
+  6. dense A, no mesh, TPU backend           → ``pallas``
      (on a live mesh the packed layout would break leaf shardings,
      so dense-einsum keeps the GSPMD lowering)
-  5. otherwise                               → ``dense``
+  7. otherwise                               → ``dense``
+
+:func:`resolve_schedule_backend` routes an explicitly-requested static
+sparse backend (``sparse``/``sparse_host``/``mesh_sparse``) to its
+``*_dynamic`` sibling when the matrix is a stacked schedule — the permute
+rounds and wire cost are identical, only the weight gather becomes
+step-indexed — and only falls back to ``dense`` (loudly) for backends with
+no dynamic form.
 
 Supported JAX versions: 0.4.x (tested on 0.4.37) and >= 0.5 — every
 version-sensitive construct (shard_map flavor, AbstractMesh constructor)
@@ -86,6 +118,9 @@ __all__ = [
     "sparse_combine_host",
     "make_sparse_combine",
     "make_mesh_sparse_combine",
+    "make_sparse_host_dynamic_combine",
+    "make_sparse_dynamic_combine",
+    "make_mesh_sparse_dynamic_combine",
     "make_pallas_combine",
     "pack_pytree",
     "centralized_combine",
@@ -216,6 +251,124 @@ def make_mesh_sparse_combine(A: np.ndarray, mesh, axis_name: str,
         return compat.shard_map(
             inner, mesh, in_specs=(specs,), out_specs=specs,
             axis_names=manual)(phi)
+
+    return combine
+
+
+# ---------------------------------------------------------------------------
+# Dynamic-schedule sparse combines: fixed ppermute rounds over the period's
+# offset union, per-step weights gathered with the traced step index
+# ---------------------------------------------------------------------------
+
+def _ir_for(A):
+    """Accept a ScheduleIR, a (K, K) matrix, or a stacked (S, K, K)
+    schedule and return the ScheduleIR lowering."""
+    from repro.core import topology
+    if isinstance(A, topology.ScheduleIR):
+        return A
+    return topology.schedule_ir(np.asarray(A))
+
+
+def _schedule_step(step, S: int):
+    """The traced row index into the (S, ...) weight tables."""
+    if step is None:
+        if S != 1:
+            raise ValueError(
+                "a dynamic matrix schedule needs the step index: call "
+                "combine(phi, step)")
+        return jnp.zeros((), jnp.int32)
+    return jnp.mod(step, S)
+
+
+def make_sparse_host_dynamic_combine(ir) -> CombineFn:
+    """Host-roll lowering of a dynamic schedule: one weighted ``jnp.roll``
+    per offset in the period's union, weights gathered at ``step % S``.
+
+    Identical math to the dense step-indexed einsum for *every* schedule
+    kind (an offset inactive at some step carries elementwise-zero weights
+    there).  Under GSPMD with the agent dim sharded each roll lowers to a
+    collective-permute of one shard — O(deg·|w|) wire per combine, where
+    deg is the offset-union size, vs O(K·|w|) for the dense gather."""
+    K, S, offsets = ir.K, ir.period, ir.offsets
+    self_w = jnp.asarray(ir.self_weights)        # (S, K)
+    off_w = jnp.asarray(ir.offset_weights)       # (S, D, K)
+
+    def combine(phi: PyTree, step=None) -> PyTree:
+        s = _schedule_step(step, S)
+        sw = jax.lax.dynamic_index_in_dim(self_w, s, keepdims=False)
+        ow = jax.lax.dynamic_index_in_dim(off_w, s, keepdims=False)
+
+        def leaf(x):
+            shape = (K,) + (1,) * (x.ndim - 1)
+            acc = x * sw.astype(x.dtype).reshape(shape)
+            for i, d in enumerate(offsets):
+                # agent k receives from agent (k - d) mod K == roll by +d
+                acc = acc + (ow[i].astype(x.dtype).reshape(shape)
+                             * jnp.roll(x, d, axis=0))
+            return acc
+
+        return jax.tree.map(leaf, phi)
+
+    return combine
+
+
+def make_sparse_dynamic_combine(ir, axis_name: str) -> CombineFn:
+    """``lax.ppermute`` lowering of a dynamic schedule, to be called
+    *inside* shard_map with the agent axis one-agent-per-shard over
+    ``axis_name``.
+
+    The permute set is the period's offset union — fixed across steps, so
+    the whole schedule compiles to one program; only the weight gather
+    (two scalar loads per round from the (S, ·, K) tables) sees the step.
+    Wire bytes per combine: D · |w_local| with D = deg of the union."""
+    K, S, offsets = ir.K, ir.period, ir.offsets
+    np_self_w = np.asarray(ir.self_weights, np.float32)     # (S, K)
+    np_off_w = np.asarray(ir.offset_weights, np.float32)    # (S, D, K)
+
+    def combine(phi: PyTree, step=None) -> PyTree:
+        s = _schedule_step(step, S)
+        k = jax.lax.axis_index(axis_name)
+        sw = jnp.asarray(np_self_w)[s, k]
+        ow = jnp.asarray(np_off_w)[s, :, k]      # (D,) this agent's weights
+
+        def leaf(x):
+            acc = x * sw.astype(x.dtype)
+            for i, d in enumerate(offsets):
+                perm = [(l, (l + d) % K) for l in range(K)]
+                recv = jax.lax.ppermute(x, axis_name, perm)
+                acc = acc + recv * ow[i].astype(x.dtype)
+            return acc
+
+        return jax.tree.map(leaf, phi)
+
+    return combine
+
+
+def make_mesh_sparse_dynamic_combine(ir, mesh, axis_name: str,
+                                     in_specs: PyTree | None = None
+                                     ) -> CombineFn:
+    """Production dynamic combine: shard_map over the agent mesh axis with
+    the :func:`make_sparse_dynamic_combine` rounds; the step index rides in
+    replicated.  Same in_specs contract as :func:`make_mesh_sparse_combine`
+    (pass the real leaf specs for TP-sharded trees or shard_map all-gathers
+    them at entry)."""
+    from jax.sharding import PartitionSpec as _P
+
+    inner = make_sparse_dynamic_combine(ir, axis_name)
+    specs = in_specs if in_specs is not None else _P(axis_name)
+    manual = {axis_name}
+    for s in compat.tree_leaves(specs, is_leaf=lambda x: isinstance(x, _P)):
+        for part in s:
+            if part is not None:
+                manual.update((part,) if isinstance(part, str) else part)
+
+    def combine(phi: PyTree, step=None) -> PyTree:
+        if step is None:
+            _schedule_step(step, ir.period)      # raise early when S > 1
+            step = jnp.zeros((), jnp.int32)
+        return compat.shard_map(
+            inner, mesh, in_specs=(specs, _P()), out_specs=specs,
+            axis_names=manual)(phi, step)
 
     return combine
 
@@ -364,14 +517,23 @@ def _stacked(Aj: jax.Array, apply: Callable[[jax.Array, PyTree], PyTree]
     return combine
 
 
+# Static sparse backend -> its stacked-schedule-capable sibling: the same
+# ppermute rounds, with the per-step weight rows gathered by the traced step.
+_DYNAMIC_SIBLING = {"sparse": "sparse_dynamic",
+                    "sparse_host": "sparse_host_dynamic",
+                    "mesh_sparse": "mesh_sparse_dynamic"}
+
+
 def _reject_stacked(A, name: str) -> np.ndarray:
     A = np.asarray(A)
     if A.ndim == 3:
         raise ValueError(
-            f"combine backend {name!r} precomputes a per-offset permute "
-            f"schedule and cannot serve a stacked ({A.shape[0]}-step) matrix "
-            f"schedule; dynamic topologies need the 'dense' or 'pallas' "
-            f"backend")
+            f"combine backend {name!r} precomputes a static per-offset "
+            f"permute schedule and cannot serve a stacked ({A.shape[0]}-"
+            f"step) matrix schedule; use its dynamic sibling "
+            f"{_DYNAMIC_SIBLING[name]!r} (same O(deg·|w|) ppermute rounds, "
+            f"weights gathered with the traced step) — or the step-indexed "
+            f"'dense'/'pallas' dense fallbacks")
     return A
 
 
@@ -400,15 +562,40 @@ def _build_mesh_sparse(*, A, mesh, axis_name, in_specs=None, **_ctx
                        ) -> CombineFn:
     A = _reject_stacked(A, "mesh_sparse")
     K = A.shape[0]
+    _check_agent_extent("mesh_sparse", mesh, axis_name, K)
+    return _stepless(make_mesh_sparse_combine(A, mesh, axis_name,
+                                              in_specs=in_specs))
+
+
+def _check_agent_extent(name: str, mesh, axis_name: str, K: int) -> None:
     extent = compat.mesh_axis_sizes(mesh).get(axis_name)
     if extent != K:
         raise ValueError(
-            f"mesh_sparse needs one agent per shard: axis {axis_name!r} has "
-            f"extent {extent} but A is {K}x{K}. Use 'sparse_host' when the "
-            f"agent axis spans multiple mesh axes (e.g. multi-pod data "
+            f"{name} needs one agent per shard: axis {axis_name!r} has "
+            f"extent {extent} but the schedule is over K={K} agents. Use "
+            f"'sparse_host{'_dynamic' if 'dynamic' in name else ''}' when "
+            f"the agent axis spans multiple mesh axes (e.g. multi-pod data "
             f"placement).")
-    return _stepless(make_mesh_sparse_combine(A, mesh, axis_name,
-                                              in_specs=in_specs))
+
+
+@register_backend("sparse_host_dynamic")
+def _build_sparse_host_dynamic(*, A, **_ctx) -> CombineFn:
+    return make_sparse_host_dynamic_combine(_ir_for(A))
+
+
+@register_backend("sparse_dynamic", needs_axis_name=True)
+def _build_sparse_dynamic(*, A, axis_name, **_ctx) -> CombineFn:
+    return make_sparse_dynamic_combine(_ir_for(A), axis_name)
+
+
+@register_backend("mesh_sparse_dynamic", needs_mesh=True,
+                  needs_axis_name=True)
+def _build_mesh_sparse_dynamic(*, A, mesh, axis_name, in_specs=None, **_ctx
+                               ) -> CombineFn:
+    ir = _ir_for(A)
+    _check_agent_extent("mesh_sparse_dynamic", mesh, axis_name, ir.K)
+    return make_mesh_sparse_dynamic_combine(ir, mesh, axis_name,
+                                            in_specs=in_specs)
 
 
 @register_backend("pallas")
@@ -451,10 +638,22 @@ def select_backend(A: np.ndarray | None, *, mesh=None,
     docstring for the rule table)."""
     if A is None:
         return "dense"
+    from repro.core import topology as _topo
+    if isinstance(A, _topo.ScheduleIR):
+        A = A.stacked()
     A = np.asarray(A)
     if A.ndim == 3:
-        # stacked per-step schedule: only the step-indexed dense einsum
-        # serves arbitrary per-step graphs under jit
+        # stacked per-step schedule: a sparse offset union lowers to fixed
+        # ppermute rounds with step-gathered weights; a dense union (e.g.
+        # gossip on the full graph) keeps the step-indexed dense einsum
+        ir = _ir_for(A)
+        if ir.K == 1:
+            return "none"
+        if ir.degree < ir.K - 1:
+            if (mesh is not None and axis_name is not None
+                    and compat.mesh_axis_sizes(mesh).get(axis_name) == ir.K):
+                return "mesh_sparse_dynamic"
+            return "sparse_host_dynamic"
         return "dense"
     K = A.shape[0]
     if K == 1:
@@ -474,20 +673,30 @@ def select_backend(A: np.ndarray | None, *, mesh=None,
     return "dense"
 
 
-# Backends able to index a stacked (S, K, K) schedule with the traced step.
-_STEP_INDEXED_BACKENDS = ("dense", "pallas")
+# Backends able to serve a stacked (S, K, K) schedule with the traced step.
+_STEP_INDEXED_BACKENDS = ("dense", "pallas", "sparse_dynamic",
+                          "sparse_host_dynamic", "mesh_sparse_dynamic")
 
 
 def resolve_schedule_backend(backend: str, A) -> str:
-    """Downgrade ``backend`` to 'dense' when ``A`` is a stacked schedule the
-    backend cannot step-index ('auto' resolves itself in
+    """Route ``backend`` to a stacked-schedule-capable equivalent when ``A``
+    is a stacked schedule ('auto' resolves itself in
     :func:`select_backend`).  The single owner of the capability list —
-    trainer and launch both route through here.  The downgrade is loud: a
-    sparse backend was chosen for its O(deg·|w|) wire cost, and the dense
-    einsum gives that up."""
+    trainer and launch both route through here.
+
+    The static sparse backends upgrade silently to their ``*_dynamic``
+    siblings: identical permute rounds and O(deg·|w|) wire, only the weight
+    gather becomes step-indexed.  A backend with no dynamic form falls back
+    to 'dense' — loudly, because that gives up the sparse wire cost."""
     if (backend != "auto" and A is not None
             and np.asarray(A).ndim == 3
             and backend not in _STEP_INDEXED_BACKENDS):
+        b = _BACKENDS.get(backend)
+        if b is not None and not b.needs_matrix:
+            return backend           # matrix-free (none/centralized): no-op
+        sibling = _DYNAMIC_SIBLING.get(backend)
+        if sibling is not None:
+            return sibling
         import warnings
         warnings.warn(
             f"combine backend {backend!r} cannot step-index a stacked "
@@ -508,10 +717,14 @@ def make_combine(strategy: str, A: np.ndarray | None = None,
     ``strategy``: 'auto' | any :func:`combine_backends` name.  'auto'
     resolves via :func:`select_backend`.
 
-    ``A`` may be one ``(K, K)`` matrix or a stacked ``(S, K, K)`` schedule
-    (see :class:`repro.core.topology.TopologySchedule`); stacked schedules
-    are served by the 'dense'/'pallas' backends, which index the stack with
-    the step passed to ``combine(phi, step)``.
+    ``A`` may be one ``(K, K)`` matrix, a stacked ``(S, K, K)`` schedule
+    (see :class:`repro.core.topology.TopologySchedule`), or — for the
+    ``*_dynamic`` backends — a pre-lowered
+    :class:`repro.core.topology.ScheduleIR`.  Stacked schedules are served
+    at O(deg·|w|) wire by the ``sparse_dynamic`` family (fixed ppermute
+    rounds, weights gathered with the step passed to
+    ``combine(phi, step)``) and at O(K·|w|) by the step-indexed
+    'dense'/'pallas' fallbacks.
     """
     if strategy == "auto":
         strategy = select_backend(A, mesh=mesh, axis_name=axis_name)
@@ -535,14 +748,19 @@ def combine_wire_bytes(A: np.ndarray, strategy: str, model_bytes: int) -> int:
     """Per-step collective-byte model for a backend (benchmark reporting).
 
     ``model_bytes``: size of one agent's launch model.  dense/pallas gather
-    K−1 remote models; sparse moves one model per circular offset;
-    centralized is a reduce+broadcast (2·(K−1)/K); none moves nothing.
+    K−1 remote models; sparse (static or dynamic) moves one model per
+    offset of the (union) permute schedule; centralized is a
+    reduce+broadcast (2·(K−1)/K); none moves nothing.  ``A`` may be a
+    ``(K, K)`` matrix or a stacked ``(S, K, K)`` schedule.
     """
-    K = A.shape[0]
+    A = np.asarray(A)
+    K = A.shape[-1]
     if strategy in ("none",):
         return 0
-    if strategy in ("sparse", "sparse_host", "mesh_sparse"):
-        return len(_circular_offsets(np.asarray(A))) * model_bytes
+    if strategy in ("sparse", "sparse_host", "mesh_sparse",
+                    "sparse_dynamic", "sparse_host_dynamic",
+                    "mesh_sparse_dynamic"):
+        return _ir_for(A).degree * model_bytes
     if strategy == "centralized":
         return 2 * (K - 1) * model_bytes // K
     return (K - 1) * model_bytes

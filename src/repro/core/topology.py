@@ -20,7 +20,11 @@ Two object layers sit on top of the raw edge/matrix helpers:
     per-step combination matrices, cycled with period ``S``.  The stack is
     precomputed on the host so dynamic graphs stay jit-compatible — the
     combine backend indexes the stack with the traced step counter instead
-    of re-tracing per graph.  Kinds (:data:`SCHEDULES`):
+    of re-tracing per graph.  ``ir()`` additionally emits the sparse
+    :class:`ScheduleIR` lowering (the union of circular offsets over the
+    period plus per-step weight tables) that the ``*_dynamic`` combine
+    backends turn into a fixed set of ``lax.ppermute`` rounds at
+    O(deg·|w|) wire cost.  Kinds (:data:`SCHEDULES`):
 
     ``static``        every step uses the topology's matrix (S = 1)
     ``link_failure``  each edge drops i.i.d. with probability ``p`` per
@@ -59,6 +63,8 @@ __all__ = [
     "neighbor_lists",
     "Topology",
     "build_topology",
+    "ScheduleIR",
+    "schedule_ir",
     "TopologySchedule",
     "make_schedule",
     "SCHEDULES",
@@ -350,6 +356,90 @@ def build_topology(name: str, K: int, rule: str = "metropolis",
 
 
 # ---------------------------------------------------------------------------
+# ScheduleIR: sparse lowering of a periodic matrix schedule
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleIR:
+    """Structured sparse form of a periodic ``(S, K, K)`` matrix schedule.
+
+    Every off-diagonal entry ``A_s[l, k]`` belongs to exactly one circular
+    offset ``d = (k - l) mod K``, so any matrix stack decomposes *exactly*
+    into per-offset destination-weight vectors:
+
+      ``offsets``         union over the period of offsets ``d`` carrying
+                          any nonzero weight at any step — the fixed
+                          ``lax.ppermute`` rounds a dynamic-sparse combine
+                          executes (round_robin/link_failure/gossip never
+                          activate an edge outside the static graph, so
+                          this is the static graph's offset set)
+      ``self_weights``    ``(S, K)`` — per-step diagonal of ``A_s``
+      ``offset_weights``  ``(S, D, K)`` with ``D = len(offsets)``:
+                          ``offset_weights[s, i, k] =
+                          A_s[(k - offsets[i]) mod K, k]`` — agent ``k``'s
+                          incoming weight over round ``i`` at step ``s``.
+                          Steps that do not activate an offset carry
+                          elementwise-zero weights (the permute still runs:
+                          the round set is step-independent, which is what
+                          keeps the lowering jit-compatible)
+
+    The combine backends gather row ``step % S`` of both tables with the
+    traced step index, so a dynamic graph costs D collective-permutes of
+    one model each — O(deg·|w|) wire — instead of the O(K·|w|) gather of
+    the dense step-indexed einsum.
+    """
+
+    K: int
+    offsets: tuple[int, ...]
+    self_weights: np.ndarray      # (S, K)
+    offset_weights: np.ndarray    # (S, D, K)
+
+    @property
+    def period(self) -> int:
+        return self.self_weights.shape[0]
+
+    @property
+    def degree(self) -> int:
+        """Number of permute rounds D (the wire cost in models/step)."""
+        return len(self.offsets)
+
+    def matrix_at(self, step: int) -> np.ndarray:
+        """Reconstruct the dense matrix of ``step`` (exact inverse of
+        :func:`schedule_ir` — regression surface for the lowering)."""
+        s = step % self.period
+        A = np.zeros((self.K, self.K), dtype=self.self_weights.dtype)
+        np.fill_diagonal(A, self.self_weights[s])
+        for i, d in enumerate(self.offsets):
+            for k in range(self.K):
+                A[(k - d) % self.K, k] = self.offset_weights[s, i, k]
+        return A
+
+    def stacked(self) -> np.ndarray:
+        return np.stack([self.matrix_at(s) for s in range(self.period)])
+
+
+def schedule_ir(matrices: np.ndarray) -> ScheduleIR:
+    """Lower a ``(K, K)`` matrix or stacked ``(S, K, K)`` schedule to its
+    exact :class:`ScheduleIR` decomposition."""
+    M = np.asarray(matrices)
+    if M.ndim == 2:
+        M = M[None]
+    S, K, _ = M.shape
+    # != 0, not > 0: negative off-diagonal weights (e.g. accelerated
+    # consensus matrices) are legal entries and must keep their offset
+    offsets = tuple(d for d in range(1, K)
+                    if any(M[s, (k - d) % K, k] != 0
+                           for s in range(S) for k in range(K)))
+    self_w = np.stack([np.diagonal(M[s]).copy() for s in range(S)])
+    off_w = np.zeros((S, len(offsets), K), dtype=M.dtype)
+    for s in range(S):
+        for i, d in enumerate(offsets):
+            off_w[s, i] = [M[s, (k - d) % K, k] for k in range(K)]
+    return ScheduleIR(K=K, offsets=offsets, self_weights=self_w,
+                      offset_weights=off_w)
+
+
+# ---------------------------------------------------------------------------
 # TopologySchedule: who mixes with whom at step i, as a stacked matrix array
 # ---------------------------------------------------------------------------
 
@@ -385,6 +475,16 @@ class TopologySchedule:
         schedule (so sparse/mesh backends stay eligible), ``(S, K, K)``
         otherwise."""
         return self.matrices[0] if self.static else self.matrices
+
+    @functools.cached_property
+    def _ir(self) -> ScheduleIR:
+        return schedule_ir(self.matrices)
+
+    def ir(self) -> ScheduleIR:
+        """The sparse :class:`ScheduleIR` lowering of this schedule — what
+        the ``sparse_dynamic``/``mesh_sparse_dynamic``/
+        ``sparse_host_dynamic`` combine backends consume."""
+        return self._ir
 
     @functools.cached_property
     def mean_matrix(self) -> np.ndarray:

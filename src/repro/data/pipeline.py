@@ -35,15 +35,24 @@ class MetaBatchPipeline:
       depth:      prefetch buffer depth; 0 = synchronous (no thread).
       prepare:    ``Episode -> batch`` transform run on the producer side
                   (flattening, ``jax.device_put`` with shardings, ...).
-                  Default: the Episode itself.
+                  Default: the Episode itself.  With ``stack > 1`` it
+                  receives a *list* of ``stack`` consecutive Episodes.
       start_step: first step index (e.g. a restored checkpoint's step).
+      stack:      meta-batches per item: each ``next()`` yields ``stack``
+                  consecutive steps' episodes (as one ``prepare``d item) —
+                  the superstep driver's per-dispatch input.  The sample
+                  sequence is identical to ``stack=1``; only the grouping
+                  changes.
     """
 
     def __init__(self, source: TaskSource, *, depth: int = 2,
                  prepare: Callable[[Episode], Any] | None = None,
-                 start_step: int = 0):
+                 start_step: int = 0, stack: int = 1):
+        if stack < 1:
+            raise ValueError(f"stack must be >= 1, got {stack}")
         self.source = source
         self.depth = depth
+        self.stack = stack
         self._prepare = prepare if prepare is not None else (lambda ep: ep)
         self._step = start_step
         self._exc: BaseException | None = None
@@ -57,12 +66,20 @@ class MetaBatchPipeline:
 
     # --- producer ----------------------------------------------------------
 
+    def _sample_item(self, step: int) -> Any:
+        """One prepared item: a single episode, or ``stack`` consecutive
+        episodes handed to ``prepare`` as a list."""
+        if self.stack == 1:
+            return self._prepare(self.source.sample(step))
+        return self._prepare([self.source.sample(step + j)
+                              for j in range(self.stack)])
+
     def _worker(self) -> None:
         step = self._step
         try:
             while not self._stop.is_set():
-                item = self._prepare(self.source.sample(step))
-                step += 1
+                item = self._sample_item(step)
+                step += self.stack
                 while not self._stop.is_set():
                     try:
                         self._queue.put(item, timeout=_POLL_S)
@@ -80,8 +97,8 @@ class MetaBatchPipeline:
 
     def __next__(self) -> Any:
         if self.depth <= 0:
-            item = self._prepare(self.source.sample(self._step))
-            self._step += 1
+            item = self._sample_item(self._step)
+            self._step += self.stack
             return item
         while True:
             try:
@@ -94,7 +111,7 @@ class MetaBatchPipeline:
                 if self._thread is None or not self._thread.is_alive():
                     raise StopIteration   # stop() was called / worker gone
                 continue
-            self._step += 1
+            self._step += self.stack
             return item
 
     @property

@@ -236,14 +236,24 @@ class TrainBundle:
 
         return lambda sq: (add(sq[0]), add(sq[1]))
 
-    def make_pipeline(self, source, *, depth: int = 2, start_step: int = 0):
+    def make_pipeline(self, source, *, depth: int = 2, start_step: int = 0,
+                      stack: int | None = None):
         """Wrap a ``TaskSource`` bound to this bundle's (K, T, tb) geometry
         in a :class:`~repro.data.pipeline.MetaBatchPipeline` yielding
         device-ready global batches: the episode is flattened to the
         ``(B, ...)`` layout ``step_fn`` folds back with
         ``split_meta_batch``, modality stubs are appended, and the batch is
         ``device_put`` onto ``batch_shardings`` on the prefetch thread —
-        host-side sampling and H2D overlap the jitted step."""
+        host-side sampling and H2D overlap the jitted step.
+
+        ``stack=C`` feeds the superstep driver: each ``next()`` yields C
+        consecutive meta-batches stacked on a new leading dispatch axis of
+        size C (one host assembly + one ``device_put`` per dispatch), the
+        layout :func:`make_superstep`'s ``lax.scan`` unstacks on device —
+        C=1 still carries the (1, B, ...) axis so one driver serves every
+        C.  ``stack=None`` (default) keeps the legacy per-step ``(B, ...)``
+        layout for direct ``step_fn`` consumers.  The sample sequence is
+        identical either way."""
         from repro.data.pipeline import MetaBatchPipeline
         src_tb = getattr(source, "task_batch", self.tb)
         if (source.K, source.tasks_per_agent, src_tb) != (self.K, self.T,
@@ -254,16 +264,36 @@ class TrainBundle:
                 f"T={self.T}, tb={self.tb})")
         cfg, dt = self.cfg, DTYPES[self.cfg.dtype]
         B = self.K * self.T * self.tb * 2
-        extras = modality_extras(cfg, (B,), dt)
 
-        def prepare(ep):
-            batch = ep.as_flat_batch()
-            batch.update(extras)
-            return jax.device_put(
-                batch, {k: self.batch_shardings[k] for k in batch})
+        if stack is None:
+            extras = modality_extras(cfg, (B,), dt)
+
+            def prepare(ep):
+                batch = ep.as_flat_batch()
+                batch.update(extras)
+                return jax.device_put(
+                    batch, {k: self.batch_shardings[k] for k in batch})
+        else:
+            if stack < 1:
+                raise ValueError(f"stack must be >= 1, got {stack}")
+            extras = modality_extras(cfg, (stack, B), dt)
+            # the stacked leading (dispatch) axis is unsharded; every batch
+            # dim keeps its per-step spec one position to the right
+            stacked_sh = {
+                k: NamedSharding(self.mesh, P(*((None,) + tuple(sh.spec))))
+                for k, sh in self.batch_shardings.items()}
+
+            def prepare(eps):
+                eps = eps if isinstance(eps, list) else [eps]
+                flat = [ep.as_flat_batch() for ep in eps]
+                batch = {k: np.stack([b[k] for b in flat]) for k in flat[0]}
+                batch.update(extras)
+                return jax.device_put(
+                    batch, {k: stacked_sh[k] for k in batch})
 
         return MetaBatchPipeline(source, depth=depth, prepare=prepare,
-                                 start_step=start_step)
+                                 start_step=start_step,
+                                 stack=1 if stack is None else stack)
 
 
 def opt_state_axes(opt_name: str, params_axes: PyTree) -> PyTree:
@@ -328,6 +358,8 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
         # shards at entry (measured +77% wire).  'mesh_sparse' stays
         # selectable because build_train passes the real leaf specs below.
         backend = "sparse_host"
+    # Stacked (dynamic) schedules: static sparse backends upgrade to their
+    # *_dynamic siblings (same permute rounds, step-gathered weights)
     backend = diffusion.resolve_schedule_backend(backend, A)
     combine_fn = None
     if strat_obj.needs_combine_fn and K > 1:
@@ -374,6 +406,43 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
     return TrainBundle(cfg, mesh, K, T, tb, train_step, state_abs, state_sh,
                        batch_sh, init_state_fn, loss_fn=model.loss_fn,
                        mcfg=mcfg, schedule=sched)
+
+
+# ---------------------------------------------------------------------------
+# Superstep: C meta-steps per dispatch (the dispatch-free training loop)
+# ---------------------------------------------------------------------------
+
+# Scalar step metrics carried out of the scan — one (C,) array per key, so a
+# C-step dispatch costs ONE host fetch instead of C device syncs.  Per-agent
+# metrics (K-vectors) stay inside the step; consumers that need them run at
+# C=1 or via the eval harness.
+SUPERSTEP_METRICS = ("loss", "disagreement")
+
+
+def make_superstep(step_fn):
+    """Fold ``step_fn`` into ``superstep(state, batches) -> (state, metrics)``.
+
+    ``batches``: the pytree of one meta-batch with an extra leading
+    dispatch axis of size C (``TrainBundle.make_pipeline(stack=C)``'s
+    layout).  The C meta-steps run inside one ``lax.scan`` — a single
+    jitted, buffer-donatable call, so the Python loop dispatches (and
+    syncs metrics to host) once per C steps instead of once per step.
+    ``metrics`` maps each :data:`SUPERSTEP_METRICS` key to a ``(C,)``
+    device array (step-resolved, fetched in one transfer).
+
+    Step-for-step identical to calling ``step_fn`` C times: the scan body
+    IS the per-step function, and the batch sequence is the same because
+    the stacked pipeline groups — never reorders — episodes.
+    """
+
+    def superstep(state, batches):
+        def body(st, batch):
+            st, metrics = step_fn(st, batch)
+            return st, {k: metrics[k] for k in SUPERSTEP_METRICS}
+
+        return jax.lax.scan(body, state, batches)
+
+    return superstep
 
 
 # ---------------------------------------------------------------------------

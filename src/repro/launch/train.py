@@ -10,7 +10,17 @@ record per logged step and — with ``--eval-every`` — one
 ``{"kind": "eval", ...}`` record per :class:`~repro.eval.EvalHarness` pass,
 carrying the recurring-vs-unseen adaptation-loss curves, the generalization
 gap, and disagreement-at-eval.  Benchmarks and plots consume the log
-instead of scraping stdout.
+instead of scraping stdout.  Train records carry ``step_time_s`` (per-step
+train-compute wall of the dispatch that produced them, excluding eval/
+checkpoint/log time) next to the cumulative wall-clock ``time_s``.
+
+The hot loop is a *superstep* driver: ``--steps-per-dispatch C`` runs C
+meta-steps inside one jitted, buffer-donated ``lax.scan`` call
+(:func:`repro.launch.steps.make_superstep`) with the pipeline stacking C
+meta-batches per dispatch and metrics accumulated on device — one Python
+dispatch and one host fetch per C steps, so fast hardware is no longer
+dispatch-bound.  Log/eval/checkpoint cadences align to dispatch
+boundaries; C=1 reproduces the legacy per-step loop step-for-step.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --steps 20 \\
       --reduced --seq 64 --global-batch 16 --agents 4 --seed 1 \\
@@ -103,6 +113,13 @@ def main() -> None:
     ap.add_argument("--prefetch", type=int, default=2,
                     help="meta-batch pipeline depth (0 = sample "
                          "synchronously on the step loop)")
+    ap.add_argument("--steps-per-dispatch", type=int, default=1,
+                    help="meta-steps per jitted dispatch (lax.scan "
+                         "superstep): one Python dispatch + one host "
+                         "metric fetch per C steps; log/eval/ckpt "
+                         "cadences align to dispatch boundaries. Pick "
+                         "--steps divisible by C to avoid one extra "
+                         "compile for the final partial dispatch")
     ap.add_argument("--combine", default=None,
                     help="combine backend override: 'auto' or any "
                          "diffusion.combine_backends() name")
@@ -161,7 +178,9 @@ def main() -> None:
         if resuming:
             state = restore_checkpoint(ckpt_dir, state)
             print(f"[train] restored step {int(state.step)}")
-        step_fn = jax.jit(bundle.step_fn, donate_argnums=(0,))
+        C = max(1, args.steps_per_dispatch)
+        superstep_fn = jax.jit(S.make_superstep(bundle.step_fn),
+                               donate_argnums=(0,))
         source = make_train_source(cfg, shape, bundle.K, bundle.T, bundle.tb,
                                    seed=args.seed)
         print(f"[train] task source: {source.n_train_domains} domains "
@@ -183,27 +202,46 @@ def main() -> None:
                       link_failure_p=(args.link_failure_p
                                       if args.topology_schedule
                                       == "link_failure" else None),
-                      steps=args.steps,
+                      steps=args.steps, steps_per_dispatch=C,
                       n_domains=source.n_domains,
                       holdout_domains=source.holdout_domains)
         t0 = time.time()
+        train_wall = 0.0       # train-compute only: excludes eval/ckpt/log
+        done = 0
         with bundle.make_pipeline(source, depth=args.prefetch,
-                                  start_step=int(state.step)) as pipe:
-            for i in range(args.steps):
-                state, metrics = step_fn(state, next(pipe))
-                if i % args.log_every == 0:
-                    loss = float(metrics["loss"])
-                    dis = float(metrics["disagreement"])
-                    print(f"step {int(state.step):5d} "
-                          f"loss {loss:.4f} "
-                          f"disagreement {dis:.3e} "
-                          f"({time.time() - t0:.1f}s)")
-                    run_log.write(kind="train", step=int(state.step),
-                                  loss=loss, disagreement=dis,
-                                  time_s=round(time.time() - t0, 3))
+                                  start_step=int(state.step),
+                                  stack=C) as pipe:
+            while done < args.steps:
+                n = min(C, args.steps - done)
+                batch = next(pipe)
+                if n < C:      # final partial dispatch (one extra compile)
+                    batch = {k: v[:n] for k, v in batch.items()}
+                td = time.perf_counter()
+                state, metrics = superstep_fn(state, batch)
+                # ONE host sync per dispatch: the (n,)-shaped step-resolved
+                # metric arrays come back in a single fetch
+                m = jax.device_get(metrics)
+                dispatch_s = time.perf_counter() - td
+                train_wall += dispatch_s
+                base, done = done, done + n
+                last_step = int(state.step)       # one fetch per dispatch
+                for j in range(n):
+                    if (base + j) % args.log_every == 0:
+                        step_no = last_step - n + j + 1
+                        loss = float(m["loss"][j])
+                        dis = float(m["disagreement"][j])
+                        print(f"step {step_no:5d} "
+                              f"loss {loss:.4f} "
+                              f"disagreement {dis:.3e} "
+                              f"({time.time() - t0:.1f}s)")
+                        run_log.write(kind="train", step=step_no,
+                                      loss=loss, disagreement=dis,
+                                      time_s=round(time.time() - t0, 3),
+                                      step_time_s=round(dispatch_s / n, 6),
+                                      train_time_s=round(train_wall, 3))
                 if harness is not None and (
-                        (i + 1) % args.eval_every == 0
-                        or i == args.steps - 1):
+                        base // args.eval_every < done // args.eval_every
+                        or done >= args.steps):
                     report = harness.evaluate(state, source, args.eval_tasks,
                                               prepare=prepare)
                     rec = report.to_record()
@@ -214,7 +252,8 @@ def main() -> None:
                           f"recurring {rc[0]:.3f}->{rc[-1]:.3f} "
                           f"unseen {uc[0]:.3f}->{uc[-1]:.3f} "
                           f"gap {rec['generalization_gap']:.4f}")
-                if ckpt_dir and (i + 1) % args.ckpt_every == 0:
+                if ckpt_dir and (base // args.ckpt_every
+                                 < done // args.ckpt_every):
                     save_checkpoint(ckpt_dir, int(state.step), state)
         if ckpt_dir:
             save_checkpoint(ckpt_dir, int(state.step), state)

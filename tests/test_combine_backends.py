@@ -97,7 +97,8 @@ def test_pallas_combine_inside_jit():
 def test_registry_contains_all_backends():
     names = D.combine_backends()
     for expected in ("dense", "sparse_host", "sparse", "mesh_sparse",
-                     "pallas", "centralized", "none"):
+                     "sparse_host_dynamic", "sparse_dynamic",
+                     "mesh_sparse_dynamic", "pallas", "centralized", "none"):
         assert expected in names
 
 

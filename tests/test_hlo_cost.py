@@ -1,4 +1,10 @@
 """The trip-count-aware HLO cost model (launch/hlo_cost.py)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import pytest
@@ -74,3 +80,78 @@ def test_corrected_costs_api():
     txt = _compile_text(f, jax.ShapeDtypeStruct((32, 32), jnp.float32))
     out = corrected_costs(txt)
     assert out["flops"] > 0 and out["bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Dynamic-schedule combine: collective bytes scale with deg, not K
+# (regression alongside the combine_every conditional-combine test in
+# test_update.py — both pin communication cost at the HLO level)
+# ---------------------------------------------------------------------------
+
+_DYNAMIC_BYTES_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import json, sys
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro import compat
+    from repro.core import diffusion, topology
+    from repro.launch.hlo_cost import HloCost
+
+    K, M = 8, 2048
+    mesh = compat.make_mesh((K,), ("data",))
+    phi = {"w": jax.random.normal(jax.random.key(0), (K, M), jnp.float32)}
+    phi_sh = {"w": jax.device_put(phi["w"], NamedSharding(mesh, P("data", None)))}
+    step = jnp.zeros((), jnp.int32)
+    out = {"shard_bytes": M * 4}
+    with mesh:
+        for topo_name in ["ring", "full"]:
+            topo = topology.build_topology(topo_name, K)
+            sched = topology.make_schedule("link_failure", topo, p=0.3,
+                                           period=8, seed=0)
+            dyn = jax.jit(diffusion.make_combine(
+                "mesh_sparse_dynamic", A=sched.matrices, mesh=mesh,
+                axis_name="data", in_specs={"w": P("data", None)}))
+            dense = jax.jit(diffusion.make_combine("dense", A=sched.matrices))
+            rec = {"deg": sched.ir().degree}
+            for name, fn in [("sparse", dyn), ("dense", dense)]:
+                txt = fn.lower(phi_sh, step).compile().as_text()
+                coll = HloCost(txt, n_dev=K).collectives()
+                rec[name + "_bytes"] = coll["total_bytes"]
+                rec[name + "_count"] = coll["total_count"]
+                rec[name + "_permutes"] = coll["per_op"].get(
+                    "collective-permute", {}).get("count", 0)
+            out[topo_name] = rec
+    print("HLO_BYTES_JSON:" + json.dumps(out))
+""")
+
+
+def test_sparse_dynamic_collective_bytes_scale_with_deg_not_K():
+    """At K=8 the sparse_dynamic combine must move deg permutes of one
+    shard each: deg=2 on the ring, deg=7 on the full graph — and the ring
+    must stay under the (deg+1)/K bound of the dense-stacked bytes."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", _DYNAMIC_BYTES_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         timeout=600)
+    lines = [l for l in res.stdout.splitlines()
+             if l.startswith("HLO_BYTES_JSON:")]
+    assert lines, res.stderr[-2000:]
+    out = json.loads(lines[0][len("HLO_BYTES_JSON:"):])
+    shard = out["shard_bytes"]
+    ring, full = out["ring"], out["full"]
+    assert (ring["deg"], full["deg"]) == (2, 7)
+    # deg collective-permutes of one local shard each — wire scales with
+    # the offset-union degree, NOT with K
+    assert ring["sparse_permutes"] == 2
+    assert full["sparse_permutes"] == 7
+    assert ring["sparse_bytes"] == 2 * shard
+    assert full["sparse_bytes"] == 7 * shard
+    # acceptance bound: ring sparse ≤ (deg+1)/K of the dense-stacked bytes
+    assert ring["dense_bytes"] > 0
+    assert ring["sparse_bytes"] <= (ring["deg"] + 1) / 8 * ring["dense_bytes"]

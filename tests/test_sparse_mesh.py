@@ -38,6 +38,22 @@ SCRIPT = textwrap.dedent("""
         ref = diffusion.dense_combine(jnp.asarray(A), phi)
         for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+        # dynamic schedule: the shard_mapped ppermute rounds with
+        # step-gathered weights match the dense stacked einsum at every step
+        topo = topology.build_topology("ring", K)
+        sched = topology.make_schedule("link_failure", topo, p=0.3,
+                                       period=5, seed=1)
+        dyn = jax.jit(diffusion.make_combine(
+            "mesh_sparse_dynamic", A=sched.matrices, mesh=mesh,
+            axis_name="data", in_specs=specs))
+        for step in [0, 3, 7]:
+            out = dyn(phi_sh, jnp.int32(step))
+            ref = diffusion.dense_combine(
+                jnp.asarray(sched.matrix_at(step)), phi)
+            for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-5)
     print("SPARSE_MESH_OK")
 """)
 

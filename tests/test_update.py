@@ -363,10 +363,12 @@ def test_dense_combine_indexes_stacked_schedule():
 def test_sparse_backends_reject_stacked_schedule():
     stack = np.stack([topology.combination_matrix(K, "ring")] * 3)
     for name in ["sparse_host", "sparse", "mesh_sparse"]:
-        with pytest.raises(ValueError, match="dense"):
+        # the error points at the dynamic sibling that CAN serve the stack
+        with pytest.raises(ValueError, match=f"{name}_dynamic"):
             diffusion.make_combine(name, A=stack, axis_name="data",
                                    mesh="unused")
-    assert diffusion.select_backend(stack) == "dense"
+    # auto-selection prefers the sparse dynamic lowering over dense
+    assert diffusion.select_backend(stack) == "sparse_host_dynamic"
 
 
 def test_trainer_with_dynamic_schedules_contracts(sine_model, episodes):
@@ -457,14 +459,17 @@ def test_replace_on_flat_field_warns_about_conflict():
     assert cfg4.combine == "pallas"
 
 
-def test_schedule_backend_downgrade_is_loud():
+def test_schedule_backend_resolution_for_stacked():
     stack = np.stack([topology.combination_matrix(K, "ring")] * 3)
-    with pytest.warns(RuntimeWarning, match="falling back"):
-        assert diffusion.resolve_schedule_backend("mesh_sparse",
-                                                  stack) == "dense"
-    # step-indexed and auto backends pass through silently
+    # static sparse backends upgrade silently to their dynamic siblings
+    # (same permute rounds + wire cost, step-gathered weights); dense/auto
+    # and static matrices pass through untouched
     with warnings.catch_warnings():
         warnings.simplefilter("error")
+        assert diffusion.resolve_schedule_backend(
+            "mesh_sparse", stack) == "mesh_sparse_dynamic"
+        assert diffusion.resolve_schedule_backend(
+            "sparse_host", stack) == "sparse_host_dynamic"
         assert diffusion.resolve_schedule_backend("dense", stack) == "dense"
         assert diffusion.resolve_schedule_backend("auto", stack) == "auto"
         assert diffusion.resolve_schedule_backend(
