@@ -90,7 +90,8 @@ class ArchConfig:
     num_patches: int = 0            # vlm stub frontend patches
 
     # --- meta-learning (Dif-MAML) -------------------------------------------
-    placement: str = "data"         # agent axis: data | pod
+    placement: str = "data"         # legacy-mesh agent placement: data | pod
+                                    # (ignored on meshes with an 'agent' axis)
     meta_mode: str = "maml"         # maml | fomaml | reptile
     meta_tasks: int = 2             # tasks per agent per step
     inner_lr: float = 1e-2
@@ -130,7 +131,12 @@ class ArchConfig:
         return self.ssm_d_inner // self.ssm_head_dim
 
     def num_agents(self, mesh_axes: dict[str, int]) -> int:
-        """Agent count given mesh axis sizes (e.g. {'pod':2,'data':16,...})."""
+        """Agent count given mesh axis sizes (e.g. {'pod':2,'data':16,...}).
+
+        A first-class ``agent`` mesh axis wins outright (``placement`` is
+        a legacy-mesh concept — see launch/mesh.py's mesh-axis contract)."""
+        if "agent" in mesh_axes:
+            return mesh_axes["agent"]
         if self.placement == "pod":
             return mesh_axes.get("pod", 1)
         K = mesh_axes.get("data", 1) * (

@@ -63,6 +63,25 @@ Registered backends
                  A = (1/K)11ᵀ): the paper's centralized reference.
 ``none``         identity: the non-cooperative baseline (A = I).
 
+Agent mesh axis
+===============
+
+The ``mesh_sparse`` / ``mesh_sparse_dynamic`` backends require the agent
+axis they shard_map over to hold exactly one agent per shard (extent == K).
+Two mesh generations satisfy this (the full contract lives in
+``launch/mesh.py``):
+
+* legacy meshes, where the agent graph rides ``data`` (or ``pod`` for
+  ``placement='pod'`` archs) — valid only when that axis extent equals K;
+* agent-axis meshes (``make_production_mesh(agents=K)``), where ``agent``
+  is a dedicated leading axis composed with intra-agent ``data`` (FSDP)
+  and ``model`` (TP) axes.  Here ``in_specs`` must carry each leaf's real
+  sharding (agent axis *plus* its TP/FSDP axes) so the ppermute rounds
+  move only the per-agent *shard* — deg·(per-device shard bytes) on the
+  wire — while the model-axis collectives of the surrounding step stay
+  untouched.  :func:`select_backend` defaults ``axis_name`` to ``'agent'``
+  on such meshes.
+
 Backend selection
 =================
 
@@ -635,7 +654,16 @@ def _build_none(**_ctx) -> CombineFn:
 def select_backend(A: np.ndarray | None, *, mesh=None,
                    axis_name: str | None = None) -> str:
     """Pick a backend name from topology, mesh and accelerator (see module
-    docstring for the rule table)."""
+    docstring for the rule table).
+
+    A mesh with a first-class ``agent`` axis announces the agent extent
+    itself: when ``axis_name`` is not given it defaults to ``'agent'`` on
+    such meshes, so 2D ``(agent, model)`` production meshes route sparse
+    topologies to the shard_mapped backends without the caller having to
+    know which mesh generation it is on."""
+    if mesh is not None and axis_name is None:
+        if "agent" in getattr(mesh, "axis_names", ()):
+            axis_name = "agent"
     if A is None:
         return "dense"
     from repro.core import topology as _topo

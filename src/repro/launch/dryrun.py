@@ -3,18 +3,27 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Multi-pod dry-run (deliverable e).
 
 Lowers + compiles every (architecture × input-shape) combination against the
-production meshes — 16×16 single-pod and 2×16×16 two-pod — and records
-memory analysis, HLO FLOPs/bytes, and the per-device collective schedule
-(parsed from the post-SPMD HLO) for the roofline analysis.
+production meshes — 16×16 single-pod, 2×16×16 two-pod, and the agent-axis
+meshes of ``make_production_mesh(agents=K)`` — and records memory analysis,
+HLO FLOPs/bytes, and the per-device collective schedule (parsed from the
+post-SPMD HLO) for the roofline analysis.
 
 The two lines above MUST stay the first statements in this module: jax locks
 the device count at first initialization, and only the dry-run wants 512
 placeholder host devices.
 
+With ``--agents K`` the train step is validated on the 2D/3D agent mesh:
+the per-device parameter-shard size and the schedule degree give the exact
+wire budget the sparse combine must hit — deg·shard collective-permute
+bytes, NOT K·shard — and ``--assert-budgets`` enforces it plus the pinned
+per-config total-collective ceilings in :data:`AGENT_MESH_BUDGETS` (the
+production-scale sibling of tests/test_hlo_cost.py's deg-not-K pin).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
-  ... [--combine sparse] [--out results/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k \\
+      --agents 16 --combine mesh_sparse_dynamic --assert-budgets
 """
 import argparse
 import json
@@ -114,15 +123,37 @@ def _mem_dict(mem) -> dict:
     return {f: getattr(mem, f) for f in fields}
 
 
+# Pinned agent-mesh budgets: per-device collective bytes per train step for
+# the acceptance configs on make_production_mesh(agents=16) with the
+# mesh_sparse_dynamic ring combine (measured on this revision, ceiling =
+# measured × 1.05).  --assert-budgets fails the run if a config exceeds its
+# ceiling (TP all-reduces ballooning) or if the combine's collective-permute
+# bytes leave the deg·shard window (agent_combine_check) — the regression
+# pins for the 2D-mesh composition.
+AGENT_MESH_BUDGETS: dict[tuple[str, str, int], int] = {
+    ("qwen2-7b", "train_4k", 16): 417_000_000_000,          # meas 3.972e11
+    ("mixtral-8x22b", "train_4k", 16): 2_810_000_000_000,   # meas 2.676e12
+    ("deepseek-v2-lite-16b", "train_4k", 16): 1_153_000_000_000,  # 1.098e12
+}
+
+
+def _mesh_tag(mesh, multi_pod: bool, agents: int | None) -> str:
+    if agents is None:
+        return "2x16x16" if multi_pod else "16x16"
+    return "x".join(f"{name[0]}{size}" for name, size in
+                    zip(mesh.axis_names, mesh.devices.shape))
+
+
 def run_one(arch: str, shape_name: str, multi_pod: bool,
             combine: str | None = None, save_hlo: str | None = None,
-            overrides: dict | None = None) -> dict:
+            overrides: dict | None = None, agents: int | None = None,
+            assert_budgets: bool = False) -> dict:
     import dataclasses
     cfg = get_config(arch)
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     shape = INPUT_SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod, agents=agents)
     t0 = time.time()
     with mesh:
         if shape.kind == "train":
@@ -170,23 +201,22 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     from repro.compat import cost_analysis as _cost_analysis
     cost = _cost_analysis(compiled)
     hlo = compiled.as_text()
-    n_dev_mesh = int(np.prod(mesh.devices.shape))
+    n_dev = int(np.prod(mesh.devices.shape))
     # cost_analysis() counts while-loop bodies once (ignores trip counts) —
     # fatal for layer-scanned models, including their in-scan collectives.
     # hlo_cost re-derives flops/bytes/collectives with known_trip_count
     # applied (see launch/hlo_cost.py).
     from repro.launch.hlo_cost import corrected_costs
-    corr = corrected_costs(hlo, n_dev=n_dev_mesh)
+    corr = corrected_costs(hlo, n_dev=n_dev)
     coll = corr["collectives"]
-    coll["top_level_only"] = parse_collectives(hlo, n_dev_mesh)["per_op"]
+    coll["top_level_only"] = parse_collectives(hlo, n_dev)["per_op"]
     if save_hlo:
         with open(save_hlo, "w") as f:
             f.write(hlo)
-    n_dev = int(np.prod(mesh.devices.shape))
     rec = {
         "arch": arch,
         "shape": shape_name,
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mesh": _mesh_tag(mesh, multi_pod, agents),
         "devices": n_dev,
         "kind": shape.kind,
         "combine": combine or cfg.combine,
@@ -200,6 +230,40 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         "compile_s": round(t_compile, 1),
         **extra,
     }
+    if agents is not None and shape.kind == "train":
+        from repro.compat import mesh_axis_sizes
+        from repro.launch.hlo_cost import agent_combine_check, tree_shard_bytes
+        # elem_bytes=4: ATC's φ = w + u promotes params to the f32
+        # optimizer updates, so the combine permutes f32 shards
+        shard = tree_shard_bytes(bundle.state_shardings.params,
+                                 bundle.state_specs.params,
+                                 mesh_axis_sizes(mesh), elem_bytes=4)
+        deg = bundle.schedule.ir().degree if bundle.schedule else 0
+        budget = agent_combine_check(hlo, n_dev, degree=deg,
+                                     shard_bytes=shard)
+        rec["combine_budget"] = budget
+        print(f"  combine_budget: deg={deg} × shard {shard:.3e} B → "
+              f"permute {budget['permute_bytes']:.3e} B "
+              f"({'ok' if budget['ok'] else 'VIOLATION'}), "
+              f"total coll {budget['total_collective_bytes']:.3e} B")
+        if assert_budgets:
+            if not budget["ok"]:
+                raise AssertionError(
+                    f"{arch} × {shape_name} × {rec['mesh']}: combine "
+                    f"collective-permute bytes {budget['permute_bytes']:.3e} "
+                    f"outside the deg·shard window "
+                    f"[{budget['expected_permute_bytes']:.3e}, "
+                    f"{1.25 * budget['expected_permute_bytes']:.3e}] — "
+                    f"the ring combine must move deg={deg} per-agent "
+                    f"shards, not K")
+            ceiling = AGENT_MESH_BUDGETS.get((arch, shape_name, agents))
+            if ceiling is not None and coll["total_bytes"] > ceiling:
+                raise AssertionError(
+                    f"{arch} × {shape_name} × {rec['mesh']}: total "
+                    f"collective bytes {coll['total_bytes']:.3e} exceed the "
+                    f"pinned budget {ceiling:.3e} — TP/FSDP collectives "
+                    f"regressed (or re-pin AGENT_MESH_BUDGETS with the "
+                    f"measured number if the change is intentional)")
     print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}"
           f" ok: {rec['flops_per_device']:.3e} flops/dev,"
           f" {rec['bytes_per_device']:.3e} B/dev,"
@@ -230,8 +294,21 @@ def main() -> None:
     ap.add_argument("--arch", default="all")
     ap.add_argument("--shape", default="all")
     ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--agents", type=int, default=None,
+                    help="build the agent-axis production mesh "
+                         "make_production_mesh(agents=K) — (agent, data, "
+                         "model), collapsing to 2D (agent, model) — instead "
+                         "of the legacy placement-driven meshes")
     ap.add_argument("--combine", default=None,
-                    help="override combine strategy (dense|sparse|centralized|none)")
+                    help="combine backend override: 'auto' or any "
+                         "repro.core.diffusion.combine_backends() name "
+                         "(dense | sparse | sparse_host | mesh_sparse | "
+                         "sparse_dynamic | sparse_host_dynamic | "
+                         "mesh_sparse_dynamic | pallas | centralized | none)")
+    ap.add_argument("--assert-budgets", action="store_true",
+                    help="fail if the agent-mesh combine leaves the "
+                         "deg·shard collective-permute window or a config "
+                         "exceeds its pinned AGENT_MESH_BUDGETS ceiling")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--save-hlo", default=None)
     ap.add_argument("--hvp-subsample", type=float, default=None)
@@ -261,7 +338,9 @@ def main() -> None:
         shapes = shapes_for(arch) if args.shape == "all" else [args.shape]
         for shape in shapes:
             for mp in meshes:
-                tag = f"{arch.replace('-', '_').replace('.', '_')}__{shape}__{'multi' if mp else 'single'}"
+                mesh_part = (f"agent{args.agents}" if args.agents
+                             else ("multi" if mp else "single"))
+                tag = f"{arch.replace('-', '_').replace('.', '_')}__{shape}__{mesh_part}"
                 if args.combine:
                     tag += f"__{args.combine}"
                 if args.tag:
@@ -269,7 +348,9 @@ def main() -> None:
                 path = os.path.join(args.out, tag + ".json")
                 try:
                     rec = run_one(arch, shape, mp, combine=args.combine,
-                                  save_hlo=args.save_hlo, overrides=overrides)
+                                  save_hlo=args.save_hlo, overrides=overrides,
+                                  agents=args.agents,
+                                  assert_budgets=args.assert_budgets)
                     with open(path, "w") as f:
                         json.dump(rec, f, indent=1)
                 except Exception as e:  # record and continue

@@ -305,3 +305,59 @@ def corrected_costs(hlo: str, n_dev: int = 1) -> dict:
     out = {"flops": c.flops(), "bytes": c.bytes_accessed()}
     out["collectives"] = c.collectives()
     return out
+
+
+# ---------------------------------------------------------------------------
+# Agent-mesh combine budgets: deg·shard — NOT K·shard — on the wire
+# ---------------------------------------------------------------------------
+
+def tree_shard_bytes(shardings, abstracts, axis_sizes: dict[str, int],
+                     elem_bytes: int | None = None) -> int:
+    """Per-device bytes of a sharded pytree.
+
+    ``shardings``: tree of NamedSharding (or anything with ``.spec``);
+    ``abstracts``: matching tree of shaped/dtyped leaves;
+    ``axis_sizes``: mesh axis extents.  Each leaf contributes
+    ``nbytes / prod(extent of every mesh axis its PartitionSpec names)`` —
+    the size of the block one device holds.  ``elem_bytes`` overrides each
+    leaf's dtype itemsize; pass 4 to size the ATC combine, whose
+    ``φ = w + u`` promotes bf16 params to the optimizer's f32 updates, so
+    the ppermute rounds move f32 regardless of the stored param dtype."""
+    import jax  # local import: this module must stay importable without
+    import numpy as np  # touching jax device state (tests parse HLO text)
+    total = 0
+    for sh, ab in zip(jax.tree.leaves(shardings), jax.tree.leaves(abstracts)):
+        spec = getattr(sh, "spec", sh)
+        div = 1
+        for part in spec:
+            for a in ((part,) if isinstance(part, str) else (part or ())):
+                div *= axis_sizes.get(a, 1)
+        item = ab.dtype.itemsize if elem_bytes is None else elem_bytes
+        nbytes = int(np.prod(ab.shape, dtype=np.int64)) * item
+        total += nbytes // div
+    return total
+
+
+def agent_combine_check(hlo: str, n_dev: int, *, degree: int,
+                        shard_bytes: int, slack: float = 0.25) -> dict:
+    """Verify the agent-axis combine's wire cost in post-SPMD HLO.
+
+    The ppermute combine must move exactly ``degree`` rounds of one
+    per-device parameter shard: total collective-permute wire bytes in
+    ``[deg·shard, (1+slack)·deg·shard]``.  The lower bound catches a
+    combine that silently stopped being lowered; the upper bound catches
+    K-scaling regressions (dense all-gather re-emerging: K·shard ≫
+    (1+slack)·deg·shard for any sparse graph) while absorbing small
+    GSPMD resharding permutes.  Returns a record with ``ok`` plus the
+    numbers; raises nothing — callers decide how loud to be."""
+    coll = HloCost(hlo, n_dev=n_dev).collectives()
+    cp = coll["per_op"].get("collective-permute",
+                            {"count": 0, "bytes": 0, "wire_bytes": 0})
+    expected = degree * shard_bytes
+    ok = expected <= cp["wire_bytes"] <= (1 + slack) * expected
+    return {"degree": degree, "param_shard_bytes": shard_bytes,
+            "expected_permute_bytes": expected,
+            "permute_bytes": cp["wire_bytes"],
+            "permute_count": cp["count"],
+            "total_collective_bytes": coll["total_bytes"],
+            "ok": bool(ok)}

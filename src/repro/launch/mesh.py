@@ -1,11 +1,43 @@
-"""Production mesh construction.
+"""Production mesh construction — the one owner of the mesh-axis contract.
 
 Defined as functions (never module-level constants) so importing this module
 never touches jax device state.  The dry-run entrypoint sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import; everything else (tests, benches) sees the real single device.
+
+Mesh-axis contract
+==================
+
+Every mesh in this repo is built from (a subset of) four named axes:
+
+``agent``   one Dif-MAML learner per slice — the decentralized diffusion
+            graph lives on this axis and on nothing else.  When present it
+            is the leading axis, the ``agent`` *logical* axis of the
+            stacked parameter tree maps onto it 1:1
+            (``sharding/rules.py``), and the ``mesh_sparse`` /
+            ``mesh_sparse_dynamic`` combine backends shard_map their
+            ``lax.ppermute`` rounds over it (they require extent == K, one
+            agent per shard — see :mod:`repro.core.diffusion`).
+``data``    intra-agent batch/FSDP parallelism.  On legacy meshes without
+            an ``agent`` axis it doubles as the agent axis for
+            ``placement='data'`` archs (one agent per data slice).
+``model``   tensor parallelism (ffn/heads/experts/vocab candidates in
+            ``sharding/rules.py``); never carries agents.
+``pod``     legacy multi-pod axis.  Before the ``agent`` axis existed,
+            ``placement='pod'`` archs put one agent per pod and
+            ``placement='data'`` archs tiled agents over ``(pod, data)``.
+            On agent-axis meshes ``pod`` retires: the agent graph is
+            ``agent`` and everything inside an agent is ``data``/``model``,
+            regardless of ``cfg.placement``.
+
+``make_production_mesh(agents=K)`` composes the axes at production scale:
+each agent's K-th slice of the parameter stack is itself TP/FSDP-sharded
+over the remaining ``data``/``model`` extents, which is what lets the big
+configs (qwen2_7b, mixtral_8x22b, deepseek_v2_lite) run decentralized.
 """
 from __future__ import annotations
+
+import warnings
 
 import jax
 
@@ -14,16 +46,76 @@ from repro.compat import mesh_axis_sizes
 
 __all__ = ["make_production_mesh", "make_host_mesh", "mesh_axis_sizes"]
 
-
-def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return compat.make_mesh(shape, axes)
+# One pod = 256 chips (16×16); the multi-pod budget doubles it.
+_POD_DEVICES = 256
 
 
-def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
-    """Tiny mesh over whatever devices exist (tests / CPU examples)."""
+def make_production_mesh(*, multi_pod: bool = False,
+                         agents: int | None = None,
+                         model: int = 16) -> jax.sharding.Mesh:
+    """Production mesh.
+
+    ``agents=None`` (legacy): ``(data, model)`` = 16×16 single-pod or
+    ``(pod, data, model)`` = 2×16×16 two-pod — the agent graph rides the
+    ``data``/``pod`` axes per ``cfg.placement``.
+
+    ``agents=K``: an agent-axis mesh over the same device budget (256
+    single-pod, 512 with ``multi_pod``): ``(agent, data, model)`` with
+    ``data = budget // (K · model)``, collapsing to 2D ``(agent, model)``
+    when the data extent is 1.  ``K · model`` must divide the budget —
+    a non-factoring request raises with both numbers instead of silently
+    dropping devices.
+    """
+    if agents is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+        return compat.make_mesh(shape, axes)
+    budget = 2 * _POD_DEVICES if multi_pod else _POD_DEVICES
+    if agents < 1 or model < 1 or budget % (agents * model):
+        raise ValueError(
+            f"agent mesh does not factor: agents={agents} × model={model} "
+            f"must divide the {budget}-device "
+            f"{'two-pod' if multi_pod else 'single-pod'} budget "
+            f"(got {agents * model})")
+    data = budget // (agents * model)
+    if data == 1:
+        return compat.make_mesh((agents, model), ("agent", "model"))
+    return compat.make_mesh((agents, data, model), ("agent", "data", "model"))
+
+
+def make_host_mesh(data: int = 1, model: int = 1, *,
+                   agents: int | None = None) -> jax.sharding.Mesh:
+    """Tiny mesh over whatever devices exist (tests / CPU examples).
+
+    Legacy form: ``(data, model)``.  With ``agents=K``: the host-scale
+    equivalent of the agent-aware production mesh — ``(agent, data,
+    model)``, collapsing to ``(agent, model)`` when ``data == 1`` —
+    requiring ``K · data · model`` to divide the device count exactly
+    (agent-per-shard combine backends need the full extent, so a silent
+    clamp would change K under the caller).
+
+    A legacy request that does not factor over the available devices is
+    clamped as before, but now *loudly*: a RuntimeWarning reports the
+    requested and effective extents instead of silently dropping devices.
+    """
     n = len(jax.devices())
-    data = min(data, n)
-    return compat.make_mesh(
-        (data, max(1, min(model, n // data))), ("data", "model"))
+    if agents is not None:
+        if agents < 1 or data < 1 or model < 1 or n % (agents * data * model):
+            raise ValueError(
+                f"host agent mesh does not factor: agents={agents} × "
+                f"data={data} × model={model} = {agents * data * model} "
+                f"must divide the {n} available device(s)")
+        if data == 1:
+            return compat.make_mesh((agents, model), ("agent", "model"))
+        return compat.make_mesh((agents, data, model),
+                                ("agent", "data", "model"))
+    eff_data = min(data, n)
+    eff_model = max(1, min(model, n // eff_data))
+    if (eff_data, eff_model) != (data, model) or n % (eff_data * eff_model):
+        warnings.warn(
+            f"make_host_mesh(data={data}, model={model}) does not factor "
+            f"over the {n} available device(s); using "
+            f"(data={eff_data}, model={eff_model}) — "
+            f"{n - eff_data * eff_model} device(s) unused",
+            RuntimeWarning, stacklevel=2)
+    return compat.make_mesh((eff_data, eff_model), ("data", "model"))

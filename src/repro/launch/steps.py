@@ -33,8 +33,13 @@ DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
 # ---------------------------------------------------------------------------
 
 def agent_count(cfg: ArchConfig, mesh: Mesh) -> int:
+    """K for an arch on a mesh.  A first-class ``agent`` mesh axis defines
+    K outright; legacy meshes fall back to ``cfg.placement`` (one agent per
+    pod, or agents tiling the full data-parallel extent)."""
     from repro.sharding.rules import _axis_sizes
     sizes = _axis_sizes(mesh)
+    if "agent" in sizes:
+        return sizes["agent"]
     if cfg.placement == "pod":
         return sizes.get("pod", 1)
     return sizes.get("data", 1) * sizes.get("pod", 1)
@@ -315,7 +320,10 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
     assert shape.kind in ("train", "prefill")
     dt = DTYPES[cfg.dtype]
     model = build_model(cfg)
-    if cfg.placement == "pod":
+    agent_mesh = "agent" in mesh.axis_names
+    intra_agent_data = "data" in mesh.axis_names and (
+        agent_mesh or cfg.placement == "pod")
+    if intra_agent_data:
         # keep per-task activations batch-sharded over the data axis (the
         # agent/task dims are vmapped away above this constraint)
         model.act_sharding = NamedSharding(mesh, P("data", None, None))
@@ -345,19 +353,25 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
     params_sh = tree_shardings(p_axes, p_abs, rules, mesh)
 
     multi_pod = "pod" in mesh.axis_names
-    agent_axis = "pod" if (cfg.placement == "pod" and multi_pod) else "data"
+    if agent_mesh:
+        agent_axis = "agent"
+    elif cfg.placement == "pod" and multi_pod:
+        agent_axis = "pod"
+    else:
+        agent_axis = "data"
     strat_obj = update.get_strategy(
         mcfg.update_config.strategy if K > 1 else "none")
     backend = mcfg.update_config.backend
     if backend == "sparse":
-        # Sparse neighbor combine: weighted rolls over the agent axis.
-        # Under GSPMD a roll on the agent-sharded dim lowers to
-        # collective-permutes of one shard per circular offset, while every
-        # other (TP) dim keeps its sharding — a partial-manual shard_map
-        # whose in_specs omit the auto axes would instead all-gather TP
-        # shards at entry (measured +77% wire).  'mesh_sparse' stays
-        # selectable because build_train passes the real leaf specs below.
-        backend = "sparse_host"
+        # Sparse neighbor combine.  On an agent-axis mesh the shard_map
+        # form is always valid (extent == K by construction) and gets the
+        # real leaf specs below.  On legacy meshes: weighted rolls over the
+        # agent-sharded dim — under GSPMD each roll lowers to collective-
+        # permutes of one shard per circular offset, while every other (TP)
+        # dim keeps its sharding; a partial-manual shard_map whose in_specs
+        # omit the auto axes would instead all-gather TP shards at entry
+        # (measured +77% wire).
+        backend = "mesh_sparse" if agent_mesh else "sparse_host"
     # Stacked (dynamic) schedules: static sparse backends upgrade to their
     # *_dynamic siblings (same permute rounds, step-gathered weights)
     backend = diffusion.resolve_schedule_backend(backend, A)
@@ -378,7 +392,13 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
             abstract(model.specs(), dt))
     step = make_meta_step(model.loss_fn, mcfg, optimizer=opt, A=A,
                           combine_fn=combine_fn, freeze_mask=freeze_mask)
-    if cfg.placement == "pod":
+    if agent_mesh:
+        # agent dim on the agent axis; the task-batch dim rides intra-agent
+        # data parallelism when the mesh has it (2D (agent, model) meshes
+        # keep the per-agent batch local)
+        fold_spec = (P("agent", None, "data") if intra_agent_data
+                     else P("agent"))
+    elif cfg.placement == "pod":
         fold_spec = P("pod" if multi_pod else None, None, "data")
     else:
         fold_spec = P(("pod", "data") if multi_pod else "data")

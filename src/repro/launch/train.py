@@ -110,6 +110,14 @@ def main() -> None:
                     help="JSONL run log path (default results/"
                          "train_<arch>_seed<seed>.jsonl)")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh-agents", type=int, default=None,
+                    help="build an agent-axis mesh (agent[, data], model) "
+                         "with this many agents instead of the legacy "
+                         "placement-driven meshes; each agent's parameter "
+                         "slice is itself TP/FSDP-sharded. With --reduced "
+                         "the host-mesh equivalent is built over the "
+                         "available devices (count must be divisible by "
+                         "the agent count)")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="meta-batch pipeline depth (0 = sample "
                          "synchronously on the step loop)")
@@ -141,11 +149,18 @@ def main() -> None:
     if args.reduced:
         cfg = cfg.reduced()
         shape = InputShape("custom", args.seq, args.global_batch, "train")
-        mesh = make_host_mesh(data=args.agents)
+        if args.mesh_agents:
+            # host-scale agent mesh: spend the leftover device factor on TP
+            mesh = make_host_mesh(
+                model=max(1, len(jax.devices()) // args.mesh_agents),
+                agents=args.mesh_agents)
+        else:
+            mesh = make_host_mesh(data=args.agents)
         INPUT_SHAPES[shape.name] = shape
         shape_name = shape.name
     else:
-        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        mesh = make_production_mesh(multi_pod=args.multi_pod,
+                                    agents=args.mesh_agents)
         shape_name = args.shape
         shape = INPUT_SHAPES[shape_name]
 
@@ -196,6 +211,8 @@ def main() -> None:
                   f"adaptation steps every {args.eval_every} steps "
                   f"-> {log_path}")
         run_log.write(kind="config", arch=cfg.name, seed=args.seed,
+                      mesh_axes={n: int(s) for n, s in
+                                 zip(mesh.axis_names, mesh.devices.shape)},
                       K=bundle.K, T=bundle.T, tb=bundle.tb,
                       mode=ucfg.inner, strategy=ucfg.strategy,
                       topology_schedule=args.topology_schedule,

@@ -39,12 +39,32 @@ class Rules:
 
 
 def rules_for(cfg: ArchConfig, mesh: Mesh, kind: str = "train") -> Rules:
-    """Rule set for an architecture on a mesh.  kind: 'train' | 'decode'."""
+    """Rule set for an architecture on a mesh.  kind: 'train' | 'decode'.
+
+    On a mesh with a first-class ``agent`` axis (``launch/mesh.py``'s
+    ``make_production_mesh(agents=K)`` family) the logical ``agent`` axis
+    maps 1:1 onto it and ``cfg.placement`` is moot: ``data`` (when present)
+    is purely intra-agent FSDP/batch parallelism and ``model`` is TP, so
+    each agent's K-th slice of the parameter stack is itself TP/FSDP-
+    sharded.  Legacy meshes keep the placement-driven rules (agents on
+    ``pod`` or tiling ``(pod, data)``)."""
     multi_pod = "pod" in mesh.axis_names
+    agent_mesh = "agent" in mesh.axis_names
     pod_placed = cfg.placement == "pod"
 
     if kind == "train":
-        if pod_placed:
+        if agent_mesh:
+            has_data = "data" in mesh.axis_names
+            # agents = the dedicated axis; 'data' (if any) does FSDP +
+            # batch *within* each agent, exactly like the pod-placed rules
+            agent: tuple[Candidate, ...] = (("agent",),)
+            batch: tuple[Candidate, ...] = (
+                (("agent", "data"), ("agent",)) if has_data
+                else (("agent",),))
+            fsdp: tuple[Candidate, ...] = (("data",),) if has_data else ()
+            experts: tuple[Candidate, ...] = (
+                (("data",), ("model",)) if has_data else (("model",),))
+        elif pod_placed:
             # agents = pods; 'data' axis does FSDP + batch within each agent
             agent: tuple[Candidate, ...] = ((("pod",),) if multi_pod else ())
             # the global batch dim of inputs: agent-major then data within

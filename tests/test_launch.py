@@ -12,6 +12,8 @@ from repro.launch.mesh import make_host_mesh
 
 MESH1 = abstract_mesh((16, 16), ("data", "model"))
 MESH2 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+AMESH2 = abstract_mesh((16, 16), ("agent", "model"))
+AMESH3 = abstract_mesh((8, 2, 16), ("agent", "data", "model"))
 
 
 def test_agent_count_placements():
@@ -21,6 +23,15 @@ def test_agent_count_placements():
     assert S.agent_count(qw, MESH2) == 32
     assert S.agent_count(mx, MESH1) == 1
     assert S.agent_count(mx, MESH2) == 2
+
+
+def test_agent_count_agent_axis_wins():
+    # a first-class agent axis overrides placement for every config
+    qw = get_config("qwen2-7b")          # placement=data
+    mx = get_config("mixtral-8x22b")     # placement=pod
+    for cfg in (qw, mx):
+        assert S.agent_count(cfg, AMESH2) == 16
+        assert S.agent_count(cfg, AMESH3) == 8
 
 
 def test_batch_geometry_divides_exactly():

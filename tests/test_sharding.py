@@ -133,3 +133,77 @@ def test_every_arch_every_param_gets_valid_spec():
                     for a in parts:
                         total *= sizes[a]
                     assert dim % total == 0, (arch, sp.shape, pspec)
+
+
+# ---- spec_for mechanics (direct coverage) ----------------------------------
+
+AMESH2 = abstract_mesh((16, 16), ("agent", "model"))
+AMESH3 = abstract_mesh((8, 2, 16), ("agent", "data", "model"))
+
+
+def test_spec_for_joint_candidate_32_way():
+    # a joint ('pod','data') candidate shards one dim over both axes (32-way)
+    cfg = get_config("qwen2-7b")                  # placement=data
+    r = rules_for(cfg, MESH2, "train")
+    assert spec_for(("agent",), (32,), r, MESH2) == P(("pod", "data"))
+    # a dim the joint extent does not divide stays replicated: the joint
+    # candidate is all-or-nothing, there is no partial fallback to 'data'
+    assert spec_for(("agent",), (48,), r, MESH2) == P(None)
+
+
+def test_spec_for_non_dividing_falls_to_next_candidate():
+    # batch candidates on a 3D agent mesh: ('agent','data') then ('agent',)
+    cfg = get_config("qwen2-7b")
+    r = rules_for(cfg, AMESH3, "train")
+    assert spec_for(("batch", None), (256, 64), r, AMESH3) == \
+        P(("agent", "data"), None)
+    # 8 % (8·2) != 0 → falls through to the ('agent',) candidate
+    assert spec_for(("batch", None), (8, 64), r, AMESH3) == P("agent", None)
+
+
+def test_spec_for_zero_size_dim_replicated():
+    cfg = get_config("qwen2-7b")
+    r = rules_for(cfg, MESH1, "train")
+    # 0 % anything == 0 arithmetically, but an empty dim must never be
+    # assigned a mesh axis (XLA rejects sharding a zero extent)
+    assert spec_for(("ffn",), (0,), r, MESH1) == P(None)
+    assert spec_for(("agent", "ffn"), (16, 0), r, MESH1) == P("data", None)
+
+
+def test_spec_for_used_axis_conflict():
+    # vocab outranks ffn in priority; both want 'model' — the second dim
+    # must fall through to replicated, not reuse the axis
+    cfg = get_config("qwen2-7b")
+    r = rules_for(cfg, MESH1, "train")
+    s = spec_for(("vocab", "ffn"), (152064, 18944), r, MESH1)
+    assert s == P("model", None)
+
+
+def test_agent_axis_rules_2d():
+    # first-class agent axis: logical 'agent' → mesh 'agent', TP unchanged
+    cfg = get_config("qwen2-7b")
+    r = rules_for(cfg, AMESH2, "train")
+    s = spec_for(("agent", "vocab", "embed"), (16, 152064, 3584), r, AMESH2)
+    assert s == P("agent", "model", None)
+    # no 'data' on the 2D mesh → no FSDP; embed stays replicated
+    s = spec_for(("agent", "embed", "ffn"), (16, 3584, 18944), r, AMESH2)
+    assert s == P("agent", None, "model")
+
+
+def test_agent_axis_makes_placement_moot():
+    import dataclasses
+    for placement in ("data", "pod"):
+        cfg = dataclasses.replace(get_config("qwen2-7b"),
+                                  placement=placement)
+        r = rules_for(cfg, AMESH2, "train")
+        s = spec_for(("agent", "embed", "ffn"), (16, 3584, 18944), r, AMESH2)
+        assert s == P("agent", None, "model"), placement
+
+
+def test_agent_axis_3d_intra_agent_fsdp():
+    # (agent, data, model): 'data' is pure intra-agent FSDP/batch; embed
+    # gets the data axis, batch shards jointly over (agent, data)
+    cfg = get_config("qwen2-7b")
+    r = rules_for(cfg, AMESH3, "train")
+    s = spec_for(("agent", "embed", "ffn"), (8, 3584, 18944), r, AMESH3)
+    assert s == P("agent", "data", "model")
