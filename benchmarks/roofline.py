@@ -65,10 +65,13 @@ def expected_meta_multiplier(cfg) -> float:
       fomaml: inner fwd+bwd (1.5) + outer fwd+bwd (1.5)            ≈ 1.0×
               + per-layer remat recompute (+0.5)                   ≈ 1.2×
       maml:   + jvp-of-grad HVP (≈3.0) + inner-remat re-run (+1.5) ≈ 2.5×
+      reptile: inner fwd+bwd (1.5) + query fwd only (0.5) — the outer
+              'gradient' is the parameter delta, no outer bwd — (2.0/3
+              ≈ 0.67×) + remat recompute                           ≈ 0.8×
     The §Roofline 'useful_ratio' (MODEL/HLO) should therefore sit near
     1/multiplier; large deviations flag redundant compute.
     """
-    return 2.5 if cfg.meta_mode == "maml" else 1.2
+    return {"maml": 2.5, "reptile": 0.8}.get(cfg.meta_mode, 1.2)
 
 
 def analyze(rec: dict) -> dict:

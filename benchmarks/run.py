@@ -820,6 +820,89 @@ def bench_topology_ablation(quick: bool):
          detail=out)
 
 
+def bench_outer_update(quick: bool):
+    """Fused combine-then-update vs the unfused clip→adam→ATC chain:
+    HBM bytes/step and wall time at K=8, per param dtype.
+
+    Unfused bytes come from :class:`HloCost` over the compiled step (the
+    same trip-count-aware parser the roofline uses); fused bytes are the
+    kernel's analytic one-pass contract
+    (:func:`repro.launch.hlo_cost.fused_outer_update_bytes`) — interpret-
+    mode pallas HLO is emulation scaffolding, not a traffic model, and on
+    CPU CI its wall time is emulation-bound too, so the headline derived
+    quantity is the bytes ratio with parity pinned by ``max_err``.  The
+    acceptance row: bf16 params/grads with fp32 moments — the production
+    wire format — must come in at ≤ 0.5× the unfused traffic (f32 lands at
+    ≈0.53×: its unfused chain moves relatively less, every buffer already
+    being 4-byte)."""
+    from repro.core import update
+    from repro.core.fused import make_fused_outer
+    from repro.launch.hlo_cost import HloCost, fused_outer_update_bytes
+    from repro.optim import adam, optimizers as om
+
+    K, S = 8, 1
+    M = (1 << 12) if quick else (1 << 15)
+    A = jnp.asarray(topology.build_topology("ring", K).matrix)
+    lr, b1, b2, eps, clip = 1e-3, 0.9, 0.999, 1e-8, 1.0
+    out = {}
+    for dtype in (jnp.float32, jnp.bfloat16):
+        name = jnp.dtype(dtype).name
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=(K, M)), dtype)
+        g = jnp.asarray(rng.normal(size=(K, M)), dtype)
+        mu = jnp.zeros((K, M), jnp.float32)
+        nu = jnp.zeros((K, M), jnp.float32)
+
+        @jax.jit
+        def unfused(w, g, mu, nu, t):
+            scale = jax.vmap(lambda gk: om.global_norm_scale(gk, clip))(g)
+            g = (g * scale[:, None]).astype(g.dtype)
+            g32 = g.astype(jnp.float32)
+            mu = om.adam_mu(mu, g32, b1)
+            nu = om.adam_nu(nu, g32, b2)
+            u = om.adam_direction(mu, nu, 1 - b1 ** t, 1 - b2 ** t,
+                                  lr=lr, eps=eps)
+            phi = w.astype(jnp.float32) + u
+            return (jnp.einsum("lk,lm->km", A, phi).astype(w.dtype),
+                    mu, nu)
+
+        t1 = jnp.ones((), jnp.float32)
+        hlo = unfused.lower(w, g, mu, nu, t1).compile().as_text()
+        unfused_bytes = int(HloCost(hlo).bytes_accessed())
+        unfused_us = _timed(unfused, w, g, mu, nu, t1)
+
+        outer = make_fused_outer(adam(lr, b1=b1, b2=b2, eps=eps), "atc",
+                                 update.CommSchedule(1), np.asarray(A),
+                                 grad_clip=clip, num_agents=K)
+        st = om.AdamState(jnp.zeros((), jnp.int32), mu, nu)
+        step0 = jnp.zeros((), jnp.int32)
+        fused = jax.jit(lambda w, g, st, s: outer(w, g, st, s))
+        fused_bytes = fused_outer_update_bytes(
+            K * M, jnp.dtype(dtype).itemsize, optimizer="adam",
+            grad_clip=True)
+        fused_us = _timed(fused, w, g, st, step0)
+
+        w_u, mu_u, nu_u = unfused(w, g, mu, nu, t1)
+        w_f, st_f = fused(w, g, st, step0)
+        max_err = float(jnp.max(jnp.abs(w_f.astype(jnp.float32)
+                                        - w_u.astype(jnp.float32))))
+        ratio = fused_bytes / unfused_bytes
+        out[name] = {"unfused_us": unfused_us, "fused_us": fused_us,
+                     "unfused_bytes": unfused_bytes,
+                     "fused_bytes": fused_bytes, "ratio": ratio,
+                     "max_err": max_err, "K": K, "M": M}
+        emit(f"outer_update_{name}", fused_us,
+             f"unfused_us={unfused_us:.1f};"
+             f"bytes_fused={fused_bytes};bytes_unfused={unfused_bytes};"
+             f"bytes_ratio={ratio:.3f};max_err={max_err:.2e};K={K}")
+    bf = out["bfloat16"]
+    emit("outer_update_summary", 0.0,
+         f"bf16_bytes_ratio={bf['ratio']:.3f};"
+         f"bf16_within_half={bf['ratio'] <= 0.5};"
+         f"f32_bytes_ratio={out['float32']['ratio']:.3f}",
+         detail=out)
+
+
 BENCHES = {
     "fig2b": bench_fig2b_sine_regression,
     "fig2c": bench_fig2c_adaptation_steps,
@@ -828,6 +911,7 @@ BENCHES = {
     "thm2": bench_thm2_stationarity,
     "combine": bench_combine_strategies,
     "combine_dynamic": bench_combine_dynamic,
+    "outer_update": bench_outer_update,
     "superstep": bench_superstep,
     "kernels": bench_kernels,
     "generalization": bench_generalization_gap,

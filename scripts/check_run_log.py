@@ -1,22 +1,56 @@
 """CI gate for the trainer's JSONL run log.
 
-Asserts the log is well-formed and that the in-training EvalHarness hook
-actually ran: at least one ``kind=eval`` record carrying adaptation-loss
-curves for BOTH the recurring and the unseen split, plus a generalization
-gap.  Exits non-zero (with a reason) otherwise.
+Asserts the log is well-formed: a ``kind=config`` record that names its
+outer-update wiring (``combine_backend`` + the ``fused_outer`` flag — so a
+rerun of any logged experiment knows which update path produced it), train
+records, and — unless ``--no-eval`` — at least one ``kind=eval`` record
+carrying adaptation-loss curves for BOTH the recurring and the unseen
+split, plus a generalization gap.  Exits non-zero (with a reason)
+otherwise.
 
   python scripts/check_run_log.py results/ci_train_eval.jsonl
+  python scripts/check_run_log.py results/ci_train_fused.jsonl \
+      --expect-fused --no-eval
 """
+import argparse
 import json
-import sys
 
 
-def main(path: str) -> None:
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", help="trainer JSONL run log")
+    ap.add_argument("--expect-fused", action="store_true",
+                    help="require the config record to declare the fused "
+                         "one-pass outer update (combine_backend='fused')")
+    ap.add_argument("--no-eval", action="store_true",
+                    help="skip the EvalHarness-record checks (smokes that "
+                         "run without --eval-every)")
+    args = ap.parse_args()
+    path = args.path
+
     with open(path) as f:
         records = [json.loads(line) for line in f if line.strip()]
     assert records, f"{path} is empty"
     kinds = {r.get("kind") for r in records}
     assert "train" in kinds, f"no train records in {path} (kinds: {kinds})"
+
+    configs = [r for r in records if r.get("kind") == "config"]
+    assert configs, f"no config record in {path} (kinds: {kinds})"
+    for rec in configs:
+        assert "fused_outer" in rec and "combine_backend" in rec, \
+            f"config record missing outer-update provenance " \
+            f"(fused_outer/combine_backend): {sorted(rec)}"
+    if args.expect_fused:
+        assert all(r["fused_outer"] and r["combine_backend"] == "fused"
+                   for r in configs), \
+            f"--expect-fused but config records say " \
+            f"{[(r['combine_backend'], r['fused_outer']) for r in configs]}"
+
+    if args.no_eval:
+        print(f"ok: {path} has {len(configs)} config record(s) "
+              f"(backend={configs[-1]['combine_backend']}, "
+              f"fused_outer={configs[-1]['fused_outer']}) and train records")
+        return
     evals = [r for r in records if r.get("kind") == "eval"]
     assert evals, f"no eval records in {path} — was --eval-every set?"
     for rec in evals:
@@ -34,4 +68,4 @@ def main(path: str) -> None:
 
 
 if __name__ == "__main__":
-    main(sys.argv[1])
+    main()

@@ -627,6 +627,20 @@ def _build_pallas(*, A, block_m=512, interpret=None, **_ctx) -> CombineFn:
                                          interpret=interpret))
 
 
+@register_backend("fused")
+def _build_fused(*, A, block_m=512, interpret=None, **_ctx) -> CombineFn:
+    """Combine-only face of the fused outer backend.
+
+    Selecting ``backend='fused'`` moves the whole clip→moments→combine
+    chain into :func:`repro.core.fused.make_fused_outer` — the trainer
+    threads that path itself.  The registry entry exists for the two spots
+    that still need a plain combine under that name: the cta pre-mix (which
+    runs *before* the gradient and therefore cannot fuse with the update)
+    and direct ``make_combine('fused')`` callers; both get the packed
+    one-pass pallas combine."""
+    return _build_pallas(A=A, block_m=block_m, interpret=interpret)
+
+
 def _pallas_apply(A: jax.Array, phi: PyTree, *, block_m: int = 512,
                   interpret: bool | None = None) -> PyTree:
     """One pallas combine against an already-selected (possibly traced)
@@ -702,7 +716,7 @@ def select_backend(A: np.ndarray | None, *, mesh=None,
 
 
 # Backends able to serve a stacked (S, K, K) schedule with the traced step.
-_STEP_INDEXED_BACKENDS = ("dense", "pallas", "sparse_dynamic",
+_STEP_INDEXED_BACKENDS = ("dense", "pallas", "fused", "sparse_dynamic",
                           "sparse_host_dynamic", "mesh_sparse_dynamic")
 
 

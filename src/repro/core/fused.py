@@ -1,0 +1,186 @@
+"""Fused combine-then-update outer step: the pytree driver.
+
+One :func:`repro.kernels.dif_combine.fused_combine_update` launch per
+parameter leaf replaces the trainer's unfused ``clip → opt.update →
+strategy.apply/combine`` HLO chain — params, grads and moments are each
+read once and written at most once per step (the traffic contract is
+spelled in ``kernels/dif_combine/dif_combine.py``).  The only pre-kernel
+work is the global-norm reduction (the clip scale must exist before the
+first tile) and the tiny control scalars (step-selected schedule row,
+CommSchedule gate, Adam bias corrections).
+
+Leaves are flattened to (K, m) — a free reshape — and zero-padded to a
+lane-aligned block multiple; the kernel keeps padded columns at zero, and
+the pad is sliced off on the way out.  Packing the four buffer sets into
+per-dtype (K, M) groups at every step would instead cost a full extra
+read+write of everything (the concatenate materializes), defeating the
+one-pass contract — which is why the driver launches per leaf; callers
+holding pre-packed state use ``ops.fused_update_flat`` directly.
+
+Qualification (:func:`fused_unsupported_reason`): the optimizer must carry
+a :class:`repro.optim.FusedSpec` (custom ``Optimizer`` instances do not)
+and the strategy must be one of atc / consensus / centralized / cta / none.
+Mesh-sharded agent axes stay on the ppermute combine backends — the packed
+layout is single-host (``launch/steps.py`` enforces this).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import global_norm_scale
+from repro.optim.optimizers import AdamState, MomentumState, Optimizer
+
+PyTree = Any
+
+LANE = 128
+
+# DiffusionStrategy -> kernel combine mode.  cta mixes *before* the
+# gradient (the pre-combine runs through a combine backend); its post-step,
+# like 'none', is the plain local update.  centralized is uniform-ATC.
+_STRATEGY_MODES = {"atc": "atc", "consensus": "consensus",
+                   "centralized": "atc", "cta": "local", "none": "local"}
+
+
+def fused_unsupported_reason(opt: Optimizer, strategy: str) -> str | None:
+    """Why (opt, strategy) cannot take the fused path — None when it can."""
+    if opt.fused is None:
+        return ("optimizer does not expose a FusedSpec (custom Optimizer "
+                "instances must declare their per-leaf scalar math to run "
+                "in-kernel); use sgd/momentum/adam/adamw or backend='dense'")
+    if strategy not in _STRATEGY_MODES:
+        return (f"diffusion strategy {strategy!r} has no fused composition; "
+                f"supported: {tuple(_STRATEGY_MODES)}")
+    return None
+
+
+def _pad_geometry(m: int, block_m: int) -> tuple[int, int]:
+    """(padded m, tile bm): small leaves round up to one lane-aligned tile,
+    large leaves to the block multiple."""
+    unit = LANE if m <= block_m else block_m
+    m_pad = -(-m // unit) * unit
+    return m_pad, min(m_pad, block_m)
+
+
+def make_fused_outer(opt: Optimizer, strategy: str, comm, A,
+                     *, grad_clip: float | None = None,
+                     num_agents: int | None = None, block_m: int = 512,
+                     interpret: bool | None = None):
+    """Build ``outer(params, grads, opt_state, step) -> (params, opt_state)``
+    — the fused replacement for the trainer's post-gradient block.
+
+    ``comm``: a :class:`repro.core.update.CommSchedule`; ``A``: one (K, K)
+    matrix or a stacked (S, K, K) schedule (ignored for local-mode
+    strategies).  Raises ``ValueError`` when (opt, strategy) do not qualify
+    (:func:`fused_unsupported_reason`).
+    """
+    from repro.kernels.dif_combine.dif_combine import fused_combine_update
+
+    reason = fused_unsupported_reason(opt, strategy)
+    if reason is not None:
+        raise ValueError(f"fused outer update unavailable: {reason}")
+    spec = opt.fused
+    mode = _STRATEGY_MODES[strategy]
+
+    An = np.asarray(A, np.float32) if A is not None else None
+    if mode == "local":
+        K = num_agents or (An.shape[-1] if An is not None else 1)
+        table = np.eye(K, dtype=np.float32)[None]          # unread
+    elif strategy == "centralized":
+        K = num_agents or (An.shape[-1] if An is not None else None)
+        if K is None:
+            raise ValueError("fused centralized strategy needs num_agents "
+                             "or a matrix to size the uniform table")
+        table = np.full((1, K, K), 1.0 / K, np.float32)
+    else:
+        if An is None:
+            raise ValueError(f"fused strategy {strategy!r} needs the "
+                             f"combination matrix/schedule A")
+        table = An[None] if An.ndim == 2 else An
+        K = table.shape[-1]
+    if num_agents is not None and K != num_agents:
+        raise ValueError(
+            f"combination table is over K={K} agents but the trainer runs "
+            f"num_agents={num_agents}")
+    S = table.shape[0]
+    tab = jnp.asarray(table)
+
+    kern = functools.partial(
+        fused_combine_update, mode=mode, kind=spec.kind, lr=spec.lr,
+        b1=spec.b1, b2=spec.b2, eps=spec.eps,
+        weight_decay=spec.weight_decay, beta=spec.beta, block_m=block_m)
+
+    def outer(params: PyTree, grads: PyTree, opt_state: PyTree, step):
+        interp = (jax.default_backend() != "tpu" if interpret is None
+                  else interpret)
+        if grad_clip is not None:      # 0.0 is a valid (total) clip
+            scale = jax.vmap(
+                lambda g: global_norm_scale(g, grad_clip))(grads)
+            scale = scale.reshape(K, 1).astype(jnp.float32)
+        else:
+            scale = jnp.ones((K, 1), jnp.float32)
+        sel = jnp.mod(step, S).astype(jnp.int32).reshape(1, 1)
+        gate = (comm.is_comm_step(step).astype(jnp.float32)
+                if mode != "local" else jnp.zeros((), jnp.float32))
+        if spec.kind == "adam":
+            t = (opt_state.step + 1).astype(jnp.float32)
+            bc1, bc2 = 1 - spec.b1 ** t, 1 - spec.b2 ** t
+        else:
+            bc1 = bc2 = jnp.ones((), jnp.float32)
+        ctl = jnp.stack([gate, bc1, bc2]).reshape(1, 3).astype(jnp.float32)
+
+        if spec.kind == "adam":
+            mom_trees = (opt_state.mu, opt_state.nu)
+        elif spec.kind == "momentum":
+            mom_trees = (opt_state.velocity,)
+        else:
+            mom_trees = ()
+
+        def leaf(p, g, *ms):
+            shape = p.shape
+            m = int(np.prod(shape[1:], dtype=np.int64)) if p.ndim > 1 else 1
+            m_pad, bm = _pad_geometry(m, block_m)
+
+            def prep(x):
+                x = x.reshape(K, m)
+                if m_pad != m:
+                    x = jnp.pad(x, ((0, 0), (0, m_pad - m)))
+                return x
+
+            outs = kern(tab, sel, ctl, scale, prep(p), prep(g),
+                        *(prep(x) for x in ms), block_m=bm,
+                        interpret=interp)
+
+            def post(x, like):
+                if x is None:
+                    return None
+                if m_pad != m:
+                    x = jax.lax.slice_in_dim(x, 0, m, axis=1)
+                return x.reshape(like.shape)
+
+            return (post(outs[0], p),) + tuple(
+                post(o, ref) for o, ref in zip(outs[1:], ms))
+
+        p_leaves, treedef = jax.tree.flatten(params)
+        g_leaves = treedef.flatten_up_to(grads)
+        mom_leaves = [treedef.flatten_up_to(t_) for t_ in mom_trees]
+        results = [leaf(p, g, *ms)
+                   for p, g, *ms in zip(p_leaves, g_leaves, *mom_leaves)]
+        new_params = jax.tree.unflatten(treedef, [r[0] for r in results])
+        if spec.kind == "adam":
+            new_state = AdamState(
+                opt_state.step + 1,
+                jax.tree.unflatten(treedef, [r[1] for r in results]),
+                jax.tree.unflatten(treedef, [r[2] for r in results]))
+        elif spec.kind == "momentum":
+            new_state = MomentumState(
+                jax.tree.unflatten(treedef, [r[1] for r in results]))
+        else:
+            new_state = opt_state
+        return new_params, new_state
+
+    return outer

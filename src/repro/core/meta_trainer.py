@@ -269,11 +269,22 @@ def make_meta_step(
     """
     opt = optimizer or get_optimizer(cfg.outer_optimizer, cfg.outer_lr)
     uc = cfg.update_config
-    strategy = update.get_strategy(uc.strategy if cfg.num_agents > 1
-                                   else "none")
+    strategy_name = uc.strategy if cfg.num_agents > 1 else "none"
+    strategy = update.get_strategy(strategy_name)
     algo = update.get_inner_algo(uc.inner)
     comm = update.CommSchedule(uc.combine_every)
-    if combine_fn is None and strategy.needs_combine_fn:
+    fused_outer = None
+    if uc.backend == "fused":
+        # one-pass combine-then-update: clip scale, moments, launch-model
+        # mix all happen inside a single kernel sweep over the param bytes
+        from repro.core.fused import make_fused_outer
+        if A is None and strategy.needs_combine_fn:
+            A = schedule_for(cfg).stacked()
+        fused_outer = make_fused_outer(
+            opt, strategy_name, comm, A, grad_clip=cfg.grad_clip,
+            num_agents=cfg.num_agents)
+    if (combine_fn is None and strategy.needs_combine_fn
+            and (fused_outer is None or strategy.pre_combine)):
         if A is None:
             A = schedule_for(cfg).stacked()
         backend = uc.backend
@@ -301,16 +312,22 @@ def make_meta_step(
                                  base)
                     if gated else mix(base))
         losses, grads = jax.vmap(per_agent)(base, support, query)
-        if cfg.grad_clip is not None:   # 0.0 is a valid (total) clip
-            grads = jax.vmap(lambda g: clip_by_global_norm(g, cfg.grad_clip))(grads)
-        updates, opt_state = opt.update(grads, state.opt_state, base)
-        if gated and not strategy.pre_combine:
-            params = jax.lax.cond(
-                comm.is_comm_step(idx),
-                lambda p, u: strategy.apply(p, u, combine_fn, idx),
-                update.local_update, base, updates)
+        if fused_outer is not None:
+            # no lax.cond: skipped comm steps must still advance the
+            # moments, and the kernel's gate blends the mix to identity
+            params, opt_state = fused_outer(base, grads, state.opt_state,
+                                            idx)
         else:
-            params = strategy.apply(base, updates, combine_fn, idx)
+            if cfg.grad_clip is not None:   # 0.0 is a valid (total) clip
+                grads = jax.vmap(lambda g: clip_by_global_norm(g, cfg.grad_clip))(grads)
+            updates, opt_state = opt.update(grads, state.opt_state, base)
+            if gated and not strategy.pre_combine:
+                params = jax.lax.cond(
+                    comm.is_comm_step(idx),
+                    lambda p, u: strategy.apply(p, u, combine_fn, idx),
+                    update.local_update, base, updates)
+            else:
+                params = strategy.apply(base, updates, combine_fn, idx)
         metrics = {
             "loss": jnp.mean(losses),
             "per_agent_loss": losses,

@@ -13,7 +13,8 @@ from typing import Any
 
 import jax
 
-from repro.kernels.dif_combine.dif_combine import dif_combine
+from repro.kernels.dif_combine.dif_combine import (dif_combine,
+                                                   fused_combine_update)
 
 PyTree = Any
 
@@ -23,6 +24,22 @@ def combine_flat(A: jax.Array, phi: jax.Array, block_m: int = 512,
                  interpret: bool = False) -> jax.Array:
     """Combine one pre-packed (K, M) buffer; M must divide by block_m."""
     return dif_combine(A, phi, block_m=block_m, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mode", "kind", "lr", "b1", "b2", "eps", "weight_decay", "beta",
+    "block_m", "interpret"))
+def fused_update_flat(table, sel, ctl, scale, params, grads, mu=None,
+                      nu=None, *, mode="atc", kind="adam", lr, b1=0.9,
+                      b2=0.999, eps=1e-8, weight_decay=0.0, beta=0.9,
+                      block_m=512, interpret=False):
+    """Jit'd combine-then-update over one pre-packed (K, M) dtype group —
+    the per-group entry of the one-pass contract (see dif_combine.py); the
+    arbitrary-pytree driver is :func:`repro.core.fused.make_fused_outer`."""
+    return fused_combine_update(
+        table, sel, ctl, scale, params, grads, mu, nu, mode=mode, kind=kind,
+        lr=lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay, beta=beta,
+        block_m=block_m, interpret=interpret)
 
 
 def combine_tree(A: jax.Array, phi: PyTree, *, block_m: int = 512,

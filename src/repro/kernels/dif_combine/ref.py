@@ -1,6 +1,8 @@
-"""Pure-jnp oracle for the combine kernel."""
+"""Pure-jnp oracles for the combine and combine-then-update kernels."""
 import jax
 import jax.numpy as jnp
+
+from repro.optim import optimizers as om
 
 
 def dif_combine_ref(A: jax.Array, phi: jax.Array) -> jax.Array:
@@ -8,3 +10,38 @@ def dif_combine_ref(A: jax.Array, phi: jax.Array) -> jax.Array:
     out = jnp.einsum("lk,lm->km", A.astype(jnp.float32),
                      phi.astype(jnp.float32))
     return out.astype(phi.dtype)
+
+
+def fused_update_ref(table, sel, ctl, scale, params, grads, mu=None, nu=None,
+                     *, mode: str = "atc", kind: str = "adam", lr: float,
+                     b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                     weight_decay: float = 0.0, beta: float = 0.9):
+    """Same math as :func:`..dif_combine.fused_combine_update` in plain jnp
+    (fp32 throughout, identity-blend gating) — the kernel parity oracle.
+    Takes/returns the same (K, M) buffers and ``(w', mu', nu')`` tuple."""
+    w32 = params.astype(jnp.float32)
+    g32 = grads.astype(jnp.float32) * scale.astype(jnp.float32)
+    new_mu = new_nu = None
+    if kind == "adam":
+        bc1, bc2 = ctl[0, 1], ctl[0, 2]
+        new_mu = om.adam_mu(mu, g32, b1)
+        new_nu = om.adam_nu(nu, g32, b2)
+        u = om.adam_direction(new_mu, new_nu, bc1, bc2, lr=lr, eps=eps,
+                              weight_decay=weight_decay, p32=w32)
+    elif kind == "momentum":
+        v = om.momentum_velocity(mu.astype(jnp.float32), g32, beta)
+        u = om.momentum_direction(v, lr=lr)
+        new_mu = v.astype(mu.dtype)
+    else:
+        u = om.sgd_direction(g32, lr=lr)
+    if mode == "local":
+        new = w32 + u
+    else:
+        K = params.shape[0]
+        A = table.astype(jnp.float32)[sel[0, 0]]
+        gate = ctl[0, 0]
+        A_eff = gate * A + (1.0 - gate) * jnp.eye(K, dtype=jnp.float32)
+        phi = w32 + u if mode == "atc" else w32
+        mixed = jnp.einsum("lk,lm->km", A_eff, phi)
+        new = mixed if mode == "atc" else mixed + u
+    return new.astype(params.dtype), new_mu, new_nu

@@ -376,7 +376,19 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
     # *_dynamic siblings (same permute rounds, step-gathered weights)
     backend = diffusion.resolve_schedule_backend(backend, A)
     combine_fn = None
-    if strat_obj.needs_combine_fn and K > 1:
+    if backend == "fused":
+        # One-pass combine-then-update: make_meta_step builds the fused
+        # outer from mcfg (it owns optimizer/strategy/comm wiring); no
+        # combine_fn is injected — the replicated (K, m) kernel layout has
+        # no shard_map exchange, so a first-class agent mesh must keep the
+        # ppermute backends.
+        if agent_mesh:
+            raise ValueError(
+                "backend='fused' runs the packed single-host kernel layout "
+                "and cannot serve a mesh with a first-class agent axis "
+                f"(mesh axes {mesh.axis_names}); use 'sparse'/'mesh_sparse' "
+                "there, or a host mesh for the fused outer step.")
+    elif strat_obj.needs_combine_fn and K > 1:
         param_specs = jax.tree.map(lambda s: s.spec, params_sh)
         combine_fn = diffusion.make_combine(
             backend, A=A, axis_name=agent_axis, mesh=mesh,

@@ -143,7 +143,18 @@ def main() -> None:
     ap.add_argument("--link-failure-p", type=float, default=0.2,
                     help="i.i.d. per-edge drop probability for "
                          "--topology-schedule link_failure")
+    ap.add_argument("--fused-outer", action="store_true",
+                    help="run the one-pass combine-then-update outer step "
+                         "(shorthand for --combine fused): clip scale, "
+                         "optimizer moments and launch-model mix in a "
+                         "single kernel sweep over the parameter bytes")
     args = ap.parse_args()
+    if args.fused_outer:
+        if args.combine not in (None, "fused"):
+            ap.error(f"--fused-outer conflicts with --combine "
+                     f"{args.combine}: the fused outer step IS the combine "
+                     f"backend")
+        args.combine = "fused"
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -215,6 +226,8 @@ def main() -> None:
                                  zip(mesh.axis_names, mesh.devices.shape)},
                       K=bundle.K, T=bundle.T, tb=bundle.tb,
                       mode=ucfg.inner, strategy=ucfg.strategy,
+                      combine_backend=ucfg.backend,
+                      fused_outer=ucfg.backend == "fused",
                       topology_schedule=args.topology_schedule,
                       link_failure_p=(args.link_failure_p
                                       if args.topology_schedule

@@ -1,5 +1,7 @@
 """From-scratch JAX optimizers (the paper's outer loop uses Adam and SGD)."""
-from repro.optim.optimizers import Optimizer, sgd, momentum, adam, adamw, clip_by_global_norm, get_optimizer
+from repro.optim.optimizers import (FusedSpec, Optimizer, sgd, momentum, adam,
+                                    adamw, clip_by_global_norm,
+                                    global_norm_scale, get_optimizer)
 
-__all__ = ["Optimizer", "sgd", "momentum", "adam", "adamw",
-           "clip_by_global_norm", "get_optimizer"]
+__all__ = ["FusedSpec", "Optimizer", "sgd", "momentum", "adam", "adamw",
+           "clip_by_global_norm", "global_norm_scale", "get_optimizer"]

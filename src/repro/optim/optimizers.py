@@ -10,6 +10,13 @@ All states are pytrees of arrays shaped like the parameters, so the whole
 thing vmaps/pjits transparently — in particular, parameters with a leading
 agent axis get per-agent optimizer moments for free (the paper's agents each
 run a local Adam; only launch models are combined, moments stay local).
+
+The per-leaf scalar math (moment recursions, update directions, the clip
+scale) is factored into standalone functions so the tree-level ``update``
+here and the fused combine-then-update kernel
+(:mod:`repro.kernels.dif_combine`) evaluate the *same expressions* — the
+kernel's :class:`FusedSpec` on each built-in optimizer names the recursion
+and carries its hyperparameters.
 """
 from __future__ import annotations
 
@@ -23,9 +30,78 @@ PyTree = Any
 
 
 @dataclasses.dataclass(frozen=True)
+class FusedSpec:
+    """Declarative form of an optimizer's per-leaf update: which scalar
+    recursion (``kind``) with which hyperparameters.  The fused outer-update
+    kernel (:func:`repro.core.fused.make_fused_outer`) consumes this to
+    reproduce ``opt.update`` in-kernel; an optimizer without one (custom
+    ``Optimizer`` instances) disqualifies the fused path."""
+
+    kind: str                     # 'sgd' | 'momentum' | 'adam'
+    lr: float
+    b1: float = 0.9               # adam
+    b2: float = 0.999             # adam
+    eps: float = 1e-8             # adam
+    weight_decay: float = 0.0     # adam(W): decoupled decay
+    beta: float = 0.9             # momentum
+
+    @property
+    def n_moments(self) -> int:
+        """fp32-moment buffers per parameter (adam: mu+nu; momentum: v)."""
+        return {"sgd": 0, "momentum": 1, "adam": 2}[self.kind]
+
+
+@dataclasses.dataclass(frozen=True)
 class Optimizer:
     init: Callable[[PyTree], PyTree]
     update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    fused: FusedSpec | None = None
+
+
+# ---------------------------------------------------------------------------
+# Shared per-leaf scalar math — the single source both the tree-level
+# ``update`` functions below and the fused kernel evaluate
+# ---------------------------------------------------------------------------
+
+def adam_mu(mu, g32, b1: float):
+    """First-moment (mean) recursion on an fp32 gradient leaf."""
+    return b1 * mu + (1 - b1) * g32
+
+
+def adam_nu(nu, g32, b2: float):
+    """Second-moment (uncentered variance) recursion on an fp32 leaf."""
+    return b2 * nu + (1 - b2) * jnp.square(g32)
+
+
+def adam_direction(mu, nu, bc1, bc2, *, lr: float, eps: float,
+                   weight_decay: float = 0.0, p32=None):
+    """Bias-corrected Adam(W) update direction (fp32)."""
+    u = -lr * (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+    if weight_decay:
+        u = u - lr * weight_decay * p32
+    return u
+
+
+def momentum_velocity(v, g, beta: float):
+    """Heavy-ball velocity recursion (in the velocity's own dtype)."""
+    return beta * v + g
+
+
+def momentum_direction(v, *, lr: float):
+    return -lr * v
+
+
+def sgd_direction(g, *, lr: float):
+    return -lr * g
+
+
+def global_norm_scale(grads: PyTree, max_norm: float) -> jax.Array:
+    """The scalar :func:`clip_by_global_norm` multiplies every leaf by:
+    ``min(1, max_norm / (‖g‖₂ + 1e-12))`` with the norm in fp32.
+    ``max_norm=0.0`` is a valid total clip (scale 0)."""
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    return jnp.minimum(1.0, max_norm / (norm + 1e-12))
 
 
 # ---------------------------------------------------------------------------
@@ -37,9 +113,9 @@ def sgd(lr: float) -> Optimizer:
         return ()
 
     def update(grads, state, params):
-        return jax.tree.map(lambda g: -lr * g, grads), state
+        return jax.tree.map(lambda g: sgd_direction(g, lr=lr), grads), state
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, fused=FusedSpec("sgd", lr))
 
 
 class MomentumState(NamedTuple):
@@ -51,10 +127,12 @@ def momentum(lr: float, beta: float = 0.9) -> Optimizer:
         return MomentumState(jax.tree.map(jnp.zeros_like, params))
 
     def update(grads, state, params):
-        v = jax.tree.map(lambda v, g: beta * v + g, state.velocity, grads)
-        return jax.tree.map(lambda v: -lr * v, v), MomentumState(v)
+        v = jax.tree.map(lambda v, g: momentum_velocity(v, g, beta),
+                         state.velocity, grads)
+        return (jax.tree.map(lambda v: momentum_direction(v, lr=lr), v),
+                MomentumState(v))
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, fused=FusedSpec("momentum", lr, beta=beta))
 
 
 # ---------------------------------------------------------------------------
@@ -78,22 +156,26 @@ def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
     def update(grads, state, params):
         step = state.step + 1
         t = step.astype(jnp.float32)
-        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
-                          state.mu, grads)
-        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
-                          state.nu, grads)
+        mu = jax.tree.map(
+            lambda m, g: adam_mu(m, g.astype(jnp.float32), b1),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: adam_nu(v, g.astype(jnp.float32), b2),
+            state.nu, grads)
         bc1 = 1 - b1 ** t
         bc2 = 1 - b2 ** t
 
         def u(m, v, p):
-            upd = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
-            if weight_decay:
-                upd = upd - lr * weight_decay * p.astype(jnp.float32)
+            upd = adam_direction(m, v, bc1, bc2, lr=lr, eps=eps,
+                                 weight_decay=weight_decay,
+                                 p32=p.astype(jnp.float32))
             return upd.astype(p.dtype)
 
         return jax.tree.map(u, mu, nu, params), AdamState(step, mu, nu)
 
-    return Optimizer(init, update)
+    return Optimizer(init, update,
+                     fused=FusedSpec("adam", lr, b1=b1, b2=b2, eps=eps,
+                                     weight_decay=weight_decay))
 
 
 def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
@@ -106,9 +188,7 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
 # ---------------------------------------------------------------------------
 
 def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
-    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                        for g in jax.tree.leaves(grads)))
-    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    scale = global_norm_scale(grads, max_norm)
     return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
 
 

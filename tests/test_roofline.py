@@ -1,0 +1,34 @@
+"""Unit checks for the roofline model's meta-step compute multipliers."""
+import os
+import sys
+import types
+
+import pytest
+
+# benchmarks/ is a script directory at the repo root (no package install);
+# conftest only puts src/ on the path.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import expected_meta_multiplier
+
+
+def _cfg(meta_mode):
+    return types.SimpleNamespace(meta_mode=meta_mode)
+
+
+def test_meta_multipliers_per_mode():
+    assert expected_meta_multiplier(_cfg("maml")) == 2.5
+    assert expected_meta_multiplier(_cfg("fomaml")) == 1.2
+    # reptile has no outer backward — its outer 'gradient' is the adapted
+    # parameter delta, so a meta step costs LESS than a plain train step
+    assert expected_meta_multiplier(_cfg("reptile")) == 0.8
+
+
+def test_reptile_is_cheaper_than_first_order_and_plain():
+    rep = expected_meta_multiplier(_cfg("reptile"))
+    assert rep < expected_meta_multiplier(_cfg("fomaml"))
+    assert rep < 1.0 < expected_meta_multiplier(_cfg("maml"))
+
+
+def test_unknown_mode_falls_back_to_first_order():
+    assert expected_meta_multiplier(_cfg("anil")) == 1.2
