@@ -22,6 +22,9 @@ def main() -> None:
     ap.add_argument("--expect-fused", action="store_true",
                     help="require the config record to declare the fused "
                          "one-pass outer update (combine_backend='fused')")
+    ap.add_argument("--expect-outer-dtype", default=None,
+                    help="require the config record to declare this outer "
+                         "storage dtype (e.g. bfloat16)")
     ap.add_argument("--no-eval", action="store_true",
                     help="skip the EvalHarness-record checks (smokes that "
                          "run without --eval-every)")
@@ -40,6 +43,14 @@ def main() -> None:
         assert "fused_outer" in rec and "combine_backend" in rec, \
             f"config record missing outer-update provenance " \
             f"(fused_outer/combine_backend): {sorted(rec)}"
+        assert "outer_dtype" in rec and "combine_dtype" in rec, \
+            f"config record missing numerics provenance " \
+            f"(outer_dtype/combine_dtype): {sorted(rec)}"
+    if args.expect_outer_dtype:
+        assert all(r["outer_dtype"] == args.expect_outer_dtype
+                   for r in configs), \
+            f"--expect-outer-dtype {args.expect_outer_dtype} but config " \
+            f"records say {[r['outer_dtype'] for r in configs]}"
     if args.expect_fused:
         assert all(r["fused_outer"] and r["combine_backend"] == "fused"
                    for r in configs), \
@@ -49,7 +60,10 @@ def main() -> None:
     if args.no_eval:
         print(f"ok: {path} has {len(configs)} config record(s) "
               f"(backend={configs[-1]['combine_backend']}, "
-              f"fused_outer={configs[-1]['fused_outer']}) and train records")
+              f"fused_outer={configs[-1]['fused_outer']}, "
+              f"outer_dtype={configs[-1]['outer_dtype']}, "
+              f"combine_dtype={configs[-1]['combine_dtype']}) "
+              f"and train records")
         return
     evals = [r for r in records if r.get("kind") == "eval"]
     assert evals, f"no eval records in {path} — was --eval-every set?"

@@ -110,6 +110,12 @@ class ArchConfig:
 
     # --- numerics -------------------------------------------------------------
     dtype: str = "bfloat16"
+    outer_dtype: str = ""    # params/grads storage for the outer loop; ""
+                             # inherits dtype.  Adam moments stay fp32 either
+                             # way (optim/optimizers.py initialises them f32).
+    combine_dtype: str = ""  # combine wire format; "" resolves via
+                             # diffusion.resolve_combine_dtype (bf16 outer →
+                             # bf16 wire).  "float32" is the escape hatch.
     attn_shard: str = "heads"       # heads | head_dim | none  (TP strategy)
     tie_embeddings: bool = False
 

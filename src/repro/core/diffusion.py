@@ -82,6 +82,37 @@ Two mesh generations satisfy this (the full contract lives in
   untouched.  :func:`select_backend` defaults ``axis_name`` to ``'agent'``
   on such meshes.
 
+Wire format
+===========
+
+The ppermute backends (``sparse``/``mesh_sparse`` and their ``*_dynamic``
+siblings) take a ``combine_dtype`` — the dtype φ travels in on the
+collective-permute rounds:
+
+``"bfloat16"``   half-width wire.  Each leaf is rounded to bf16 **once**
+                 and bitcast to ``uint16`` before the permute rounds, so
+                 no backend pass can silently widen the transfer (XLA:CPU's
+                 float normalization upcasts bf16 collectives to f32;
+                 integer collectives are left alone on every backend, and
+                 on TPU the bitcast is free).  Every received payload is
+                 bitcast back and the weighted mix is **accumulated in
+                 f32**, with the self-term taken from the local full-
+                 precision value — one rounding on the wire, none
+                 compounding across rounds — then cast back to the leaf
+                 dtype once.  Combine wire bytes drop 2× vs the f32 wire.
+``"float32"``    full-width wire: φ is promoted to f32 for the rounds and
+                 the mix accumulates in f32 (the escape hatch when bf16
+                 parity is in question).
+``None``         legacy behavior: rounds and accumulation in the leaf's
+                 own dtype (kept for direct callers; the launch layer
+                 always resolves a concrete wire dtype).
+
+:func:`resolve_combine_dtype` owns the default: the wire is bf16 exactly
+when the outer (param/grad) dtype is bf16, and ``--combine-dtype f32``
+overrides it.  :func:`wire_elem_bytes` maps the resolved name to the
+per-element wire bytes the budget checks (``tree_shard_bytes`` /
+``agent_combine_check`` / ``AGENT_MESH_BUDGETS``) must size against.
+
 Backend selection
 =================
 
@@ -133,6 +164,8 @@ PyTree = Any
 CombineFn = Callable[..., PyTree]
 
 __all__ = [
+    "resolve_combine_dtype",
+    "wire_elem_bytes",
     "dense_combine",
     "sparse_combine_host",
     "make_sparse_combine",
@@ -157,6 +190,42 @@ __all__ = [
 ]
 
 LANE = 128                 # TPU vector lane width; pallas pad granularity
+
+# Wire dtypes the ppermute backends can put on the combine rounds, with the
+# per-element wire bytes every budget check must size against.
+WIRE_DTYPES = {"bfloat16": 2, "float32": 4}
+
+
+def resolve_combine_dtype(outer_dtype: str, override: str | None = None
+                          ) -> str:
+    """The wire dtype of the sparse combine rounds (module docstring, "Wire
+    format"): bf16 exactly when the outer (param/grad) dtype is bf16, f32
+    otherwise; ``override`` (the ``--combine-dtype`` escape hatch) wins."""
+    chosen = override or ("bfloat16" if outer_dtype == "bfloat16"
+                          else "float32")
+    if chosen not in WIRE_DTYPES:
+        raise ValueError(
+            f"combine_dtype {chosen!r} is not a supported wire format; "
+            f"pick one of {sorted(WIRE_DTYPES)}")
+    return chosen
+
+
+def wire_elem_bytes(combine_dtype: str) -> int:
+    """Per-element bytes the combine's permute rounds put on the wire."""
+    return WIRE_DTYPES[combine_dtype]
+
+
+def _wire_encode(x):
+    """One rounding to bf16, shipped as its u16 bit pattern: integer
+    collectives dodge every float-widening backend pass (XLA:CPU's float
+    normalization upcasts bf16 collectives to f32), so the permute result
+    is 2 bytes/elem in the *optimized* HLO on every backend."""
+    return jax.lax.bitcast_convert_type(x.astype(jnp.bfloat16), jnp.uint16)
+
+
+def _wire_decode(r):
+    """Received u16 payload -> f32 for the accumulation."""
+    return jax.lax.bitcast_convert_type(r, jnp.bfloat16).astype(jnp.float32)
 
 
 def _circular_offsets(A: np.ndarray) -> list[int]:
@@ -205,33 +274,49 @@ def sparse_combine_host(A: np.ndarray, phi: PyTree) -> PyTree:
     return jax.tree.map(leaf, phi)
 
 
-def make_sparse_combine(A: np.ndarray, axis_name: str) -> CombineFn:
+def make_sparse_combine(A: np.ndarray, axis_name: str,
+                        wire_dtype: str | None = None) -> CombineFn:
     """Collective-permute combine, to be called *inside* shard_map where the
     leading agent axis is sharded one-agent-per-shard over ``axis_name``.
 
     Each circular offset ``d`` with any nonzero weight contributes one
     ``lax.ppermute`` (collective-permute over ICI) plus a per-destination
     weight multiply.  Self weights are a local scale.  Total collective
-    bytes = (#offsets) · |w| vs. (K-1)/K · K · |w| for the all-gather that
-    XLA emits for the dense einsum.
-    """
+    bytes = (#offsets) · wire_elem_bytes · |w| vs. (K-1)/K · K · |w| for
+    the all-gather that XLA emits for the dense einsum.
+
+    ``wire_dtype``: the wire-format contract of the module docstring —
+    'bfloat16' ships each leaf's one-time bf16 rounding as u16 and
+    accumulates the mix in f32; 'float32' promotes to f32 for the rounds;
+    None keeps the legacy in-dtype math."""
     A = np.asarray(A)
     K = A.shape[0]
     offsets = _circular_offsets(A)
     self_w = np.diagonal(A).copy()
     off_w = {d: np.array([A[(k - d) % K, k] for k in range(K)]) for d in offsets}
+    half = wire_dtype == "bfloat16"
 
     def combine(phi: PyTree) -> PyTree:
         k = jax.lax.axis_index(axis_name)
 
         def leaf(x):
             # x: local block (1, ...) — one agent per shard.
-            acc = x * jnp.asarray(self_w, x.dtype)[k]
+            if wire_dtype is None:
+                acc = x * jnp.asarray(self_w, x.dtype)[k]
+                for d in offsets:
+                    perm = [(l, (l + d) % K) for l in range(K)]
+                    recv = jax.lax.ppermute(x, axis_name, perm)
+                    acc = acc + recv * jnp.asarray(off_w[d], x.dtype)[k]
+                return acc
+            # f32 accumulation; only neighbor terms pass through the wire
+            send = _wire_encode(x) if half else x.astype(jnp.float32)
+            acc = x.astype(jnp.float32) * jnp.asarray(self_w, jnp.float32)[k]
             for d in offsets:
                 perm = [(l, (l + d) % K) for l in range(K)]
-                recv = jax.lax.ppermute(x, axis_name, perm)
-                acc = acc + recv * jnp.asarray(off_w[d], x.dtype)[k]
-            return acc
+                recv = jax.lax.ppermute(send, axis_name, perm)
+                r32 = _wire_decode(recv) if half else recv
+                acc = acc + r32 * jnp.asarray(off_w[d], jnp.float32)[k]
+            return acc.astype(x.dtype)
 
         return jax.tree.map(leaf, phi)
 
@@ -239,7 +324,8 @@ def make_sparse_combine(A: np.ndarray, axis_name: str) -> CombineFn:
 
 
 def make_mesh_sparse_combine(A: np.ndarray, mesh, axis_name: str,
-                             in_specs: PyTree | None = None) -> CombineFn:
+                             in_specs: PyTree | None = None,
+                             wire_dtype: str | None = None) -> CombineFn:
     """Production sparse combine: shard_map over the agent mesh axis with the
     ppermute schedule of :func:`make_sparse_combine`.  The agent axis is
     manual; all other axes (e.g. 'model' tensor parallelism) stay auto.
@@ -255,7 +341,7 @@ def make_mesh_sparse_combine(A: np.ndarray, mesh, axis_name: str,
     |w_local|, vs. (K−1)/K × K × |w_local| for the dense-einsum all-gather."""
     from jax.sharding import PartitionSpec as _P
 
-    inner = make_sparse_combine(A, axis_name)
+    inner = make_sparse_combine(A, axis_name, wire_dtype=wire_dtype)
     specs = in_specs if in_specs is not None else _P(axis_name)
     # Every axis the specs mention must be manual; any remaining mesh axis
     # stays auto (partial-manual mode — fine on TPU, but XLA:CPU cannot
@@ -331,7 +417,8 @@ def make_sparse_host_dynamic_combine(ir) -> CombineFn:
     return combine
 
 
-def make_sparse_dynamic_combine(ir, axis_name: str) -> CombineFn:
+def make_sparse_dynamic_combine(ir, axis_name: str,
+                                wire_dtype: str | None = None) -> CombineFn:
     """``lax.ppermute`` lowering of a dynamic schedule, to be called
     *inside* shard_map with the agent axis one-agent-per-shard over
     ``axis_name``.
@@ -339,10 +426,13 @@ def make_sparse_dynamic_combine(ir, axis_name: str) -> CombineFn:
     The permute set is the period's offset union — fixed across steps, so
     the whole schedule compiles to one program; only the weight gather
     (two scalar loads per round from the (S, ·, K) tables) sees the step.
-    Wire bytes per combine: D · |w_local| with D = deg of the union."""
+    Wire bytes per combine: D · wire_elem_bytes · |w_local| with D = deg
+    of the union.  ``wire_dtype`` follows the module-docstring wire-format
+    contract (None = legacy in-dtype math)."""
     K, S, offsets = ir.K, ir.period, ir.offsets
     np_self_w = np.asarray(ir.self_weights, np.float32)     # (S, K)
     np_off_w = np.asarray(ir.offset_weights, np.float32)    # (S, D, K)
+    half = wire_dtype == "bfloat16"
 
     def combine(phi: PyTree, step=None) -> PyTree:
         s = _schedule_step(step, S)
@@ -351,12 +441,22 @@ def make_sparse_dynamic_combine(ir, axis_name: str) -> CombineFn:
         ow = jnp.asarray(np_off_w)[s, :, k]      # (D,) this agent's weights
 
         def leaf(x):
-            acc = x * sw.astype(x.dtype)
+            if wire_dtype is None:
+                acc = x * sw.astype(x.dtype)
+                for i, d in enumerate(offsets):
+                    perm = [(l, (l + d) % K) for l in range(K)]
+                    recv = jax.lax.ppermute(x, axis_name, perm)
+                    acc = acc + recv * ow[i].astype(x.dtype)
+                return acc
+            # f32 accumulation; only neighbor terms pass through the wire
+            send = _wire_encode(x) if half else x.astype(jnp.float32)
+            acc = x.astype(jnp.float32) * sw
             for i, d in enumerate(offsets):
                 perm = [(l, (l + d) % K) for l in range(K)]
-                recv = jax.lax.ppermute(x, axis_name, perm)
-                acc = acc + recv * ow[i].astype(x.dtype)
-            return acc
+                recv = jax.lax.ppermute(send, axis_name, perm)
+                r32 = _wire_decode(recv) if half else recv
+                acc = acc + r32 * ow[i]
+            return acc.astype(x.dtype)
 
         return jax.tree.map(leaf, phi)
 
@@ -364,7 +464,8 @@ def make_sparse_dynamic_combine(ir, axis_name: str) -> CombineFn:
 
 
 def make_mesh_sparse_dynamic_combine(ir, mesh, axis_name: str,
-                                     in_specs: PyTree | None = None
+                                     in_specs: PyTree | None = None,
+                                     wire_dtype: str | None = None
                                      ) -> CombineFn:
     """Production dynamic combine: shard_map over the agent mesh axis with
     the :func:`make_sparse_dynamic_combine` rounds; the step index rides in
@@ -373,7 +474,7 @@ def make_mesh_sparse_dynamic_combine(ir, mesh, axis_name: str,
     them at entry)."""
     from jax.sharding import PartitionSpec as _P
 
-    inner = make_sparse_dynamic_combine(ir, axis_name)
+    inner = make_sparse_dynamic_combine(ir, axis_name, wire_dtype=wire_dtype)
     specs = in_specs if in_specs is not None else _P(axis_name)
     manual = {axis_name}
     for s in compat.tree_leaves(specs, is_leaf=lambda x: isinstance(x, _P)):
@@ -571,19 +672,20 @@ def _build_sparse_host(*, A, **_ctx) -> CombineFn:
 
 
 @register_backend("sparse", needs_axis_name=True)
-def _build_sparse(*, A, axis_name, **_ctx) -> CombineFn:
+def _build_sparse(*, A, axis_name, combine_dtype=None, **_ctx) -> CombineFn:
     return _stepless(make_sparse_combine(_reject_stacked(A, "sparse"),
-                                         axis_name))
+                                         axis_name, wire_dtype=combine_dtype))
 
 
 @register_backend("mesh_sparse", needs_mesh=True, needs_axis_name=True)
-def _build_mesh_sparse(*, A, mesh, axis_name, in_specs=None, **_ctx
-                       ) -> CombineFn:
+def _build_mesh_sparse(*, A, mesh, axis_name, in_specs=None,
+                       combine_dtype=None, **_ctx) -> CombineFn:
     A = _reject_stacked(A, "mesh_sparse")
     K = A.shape[0]
     _check_agent_extent("mesh_sparse", mesh, axis_name, K)
     return _stepless(make_mesh_sparse_combine(A, mesh, axis_name,
-                                              in_specs=in_specs))
+                                              in_specs=in_specs,
+                                              wire_dtype=combine_dtype))
 
 
 def _check_agent_extent(name: str, mesh, axis_name: str, K: int) -> None:
@@ -603,18 +705,21 @@ def _build_sparse_host_dynamic(*, A, **_ctx) -> CombineFn:
 
 
 @register_backend("sparse_dynamic", needs_axis_name=True)
-def _build_sparse_dynamic(*, A, axis_name, **_ctx) -> CombineFn:
-    return make_sparse_dynamic_combine(_ir_for(A), axis_name)
+def _build_sparse_dynamic(*, A, axis_name, combine_dtype=None, **_ctx
+                          ) -> CombineFn:
+    return make_sparse_dynamic_combine(_ir_for(A), axis_name,
+                                       wire_dtype=combine_dtype)
 
 
 @register_backend("mesh_sparse_dynamic", needs_mesh=True,
                   needs_axis_name=True)
-def _build_mesh_sparse_dynamic(*, A, mesh, axis_name, in_specs=None, **_ctx
-                               ) -> CombineFn:
+def _build_mesh_sparse_dynamic(*, A, mesh, axis_name, in_specs=None,
+                               combine_dtype=None, **_ctx) -> CombineFn:
     ir = _ir_for(A)
     _check_agent_extent("mesh_sparse_dynamic", mesh, axis_name, ir.K)
     return make_mesh_sparse_dynamic_combine(ir, mesh, axis_name,
-                                            in_specs=in_specs)
+                                            in_specs=in_specs,
+                                            wire_dtype=combine_dtype)
 
 
 @register_backend("pallas")
@@ -753,7 +858,8 @@ def resolve_schedule_backend(backend: str, A) -> str:
 def make_combine(strategy: str, A: np.ndarray | None = None,
                  axis_name: str | None = None, *, mesh=None,
                  in_specs: PyTree | None = None, block_m: int = 512,
-                 interpret: bool | None = None) -> CombineFn:
+                 interpret: bool | None = None,
+                 combine_dtype: str | None = None) -> CombineFn:
     """Single entry point: build a combine fn from a backend name or 'auto'.
 
     ``strategy``: 'auto' | any :func:`combine_backends` name.  'auto'
@@ -767,9 +873,17 @@ def make_combine(strategy: str, A: np.ndarray | None = None,
     rounds, weights gathered with the step passed to
     ``combine(phi, step)``) and at O(K·|w|) by the step-indexed
     'dense'/'pallas' fallbacks.
+
+    ``combine_dtype``: wire format for the ppermute backends (see the
+    module docstring) — 'bfloat16' | 'float32' | None (legacy in-dtype).
+    Backends without a wire (dense, pallas, host rolls, …) ignore it.
     """
     if strategy == "auto":
         strategy = select_backend(A, mesh=mesh, axis_name=axis_name)
+    if combine_dtype is not None and combine_dtype not in WIRE_DTYPES:
+        raise ValueError(
+            f"combine_dtype {combine_dtype!r} is not a supported wire "
+            f"format; pick one of {sorted(WIRE_DTYPES)}")
     backend = _BACKENDS.get(strategy)
     if backend is None:
         raise ValueError(
@@ -783,7 +897,7 @@ def make_combine(strategy: str, A: np.ndarray | None = None,
         assert mesh is not None, f"{strategy!r} combine needs a mesh"
     return backend.build(A=A, axis_name=axis_name, mesh=mesh,
                          in_specs=in_specs, block_m=block_m,
-                         interpret=interpret)
+                         interpret=interpret, combine_dtype=combine_dtype)
 
 
 def combine_wire_bytes(A: np.ndarray, strategy: str, model_bytes: int) -> int:

@@ -124,16 +124,21 @@ def _mem_dict(mem) -> dict:
 
 
 # Pinned agent-mesh budgets: per-device collective bytes per train step for
-# the acceptance configs on make_production_mesh(agents=16) with the
-# mesh_sparse_dynamic ring combine (measured on this revision, ceiling =
-# measured × 1.05).  --assert-budgets fails the run if a config exceeds its
+# the acceptance configs on make_production_mesh(agents=K) with the
+# mesh_sparse_dynamic ring combine on the bf16 wire (the default: these
+# archs store bf16 outer state, so resolve_combine_dtype picks the
+# u16-bitcast half-width wire).  Measured on this revision, ceiling =
+# measured × 1.05.  --assert-budgets fails the run if a config exceeds its
 # ceiling (TP all-reduces ballooning) or if the combine's collective-permute
 # bytes leave the deg·shard window (agent_combine_check) — the regression
-# pins for the 2D-mesh composition.
+# pins for the agent-mesh composition.  The agents=8 entry is the 3D
+# (agent=8, data=2, model=16) mesh; its data axis adds all-gather /
+# resharding traffic the 2D collapse never pays, so it carries its own pin.
 AGENT_MESH_BUDGETS: dict[tuple[str, str, int], int] = {
-    ("qwen2-7b", "train_4k", 16): 417_000_000_000,          # meas 3.972e11
-    ("mixtral-8x22b", "train_4k", 16): 2_810_000_000_000,   # meas 2.676e12
-    ("deepseek-v2-lite-16b", "train_4k", 16): 1_153_000_000_000,  # 1.098e12
+    ("qwen2-7b", "train_4k", 16): 412_000_000_000,          # meas 3.922e11
+    ("qwen2-7b", "train_4k", 8): 497_000_000_000,           # meas 4.729e11
+    ("mixtral-8x22b", "train_4k", 16): 2_771_000_000_000,   # meas 2.639e12
+    ("deepseek-v2-lite-16b", "train_4k", 16): 1_149_000_000_000,  # 1.095e12
 }
 
 
@@ -232,18 +237,22 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     }
     if agents is not None and shape.kind == "train":
         from repro.compat import mesh_axis_sizes
+        from repro.core import diffusion
         from repro.launch.hlo_cost import agent_combine_check, tree_shard_bytes
-        # elem_bytes=4: ATC's φ = w + u promotes params to the f32
-        # optimizer updates, so the combine permutes f32 shards
+        # The combine permutes the *wire* dtype (bf16 payloads travel as
+        # 2-byte u16; the f32 escape hatch moves 4) — derive elem_bytes
+        # from the bundle's resolved format so the window tracks the wire.
+        wire = bundle.combine_dtype
         shard = tree_shard_bytes(bundle.state_shardings.params,
                                  bundle.state_specs.params,
-                                 mesh_axis_sizes(mesh), elem_bytes=4)
+                                 mesh_axis_sizes(mesh),
+                                 elem_bytes=diffusion.wire_elem_bytes(wire))
         deg = bundle.schedule.ir().degree if bundle.schedule else 0
         budget = agent_combine_check(hlo, n_dev, degree=deg,
-                                     shard_bytes=shard)
+                                     shard_bytes=shard, wire_dtype=wire)
         rec["combine_budget"] = budget
-        print(f"  combine_budget: deg={deg} × shard {shard:.3e} B → "
-              f"permute {budget['permute_bytes']:.3e} B "
+        print(f"  combine_budget: deg={deg} × shard {shard:.3e} B "
+              f"({wire} wire) → permute {budget['permute_bytes']:.3e} B "
               f"({'ok' if budget['ok'] else 'VIOLATION'}), "
               f"total coll {budget['total_collective_bytes']:.3e} B")
         if assert_budgets:

@@ -243,18 +243,23 @@ class HloCost:
         self._memo_coll[comp] = {}
         acc: dict[str, dict] = {}
 
-        def add(op, wire, result):
-            d = acc.setdefault(op, {"count": 0, "bytes": 0, "wire_bytes": 0})
+        def add(op, wire, result, dtype):
+            d = acc.setdefault(op, {"count": 0, "bytes": 0, "wire_bytes": 0,
+                                    "by_dtype": {}})
             d["count"] += 1
             d["bytes"] += result
             d["wire_bytes"] += wire
+            d["by_dtype"][dtype] = d["by_dtype"].get(dtype, 0) + wire
 
         def merge(sub: dict, trip: int):
             for op, d in sub.items():
-                a = acc.setdefault(op, {"count": 0, "bytes": 0, "wire_bytes": 0})
+                a = acc.setdefault(op, {"count": 0, "bytes": 0,
+                                        "wire_bytes": 0, "by_dtype": {}})
                 a["count"] += trip * d["count"]
                 a["bytes"] += trip * d["bytes"]
                 a["wire_bytes"] += trip * d["wire_bytes"]
+                for dt, w in d.get("by_dtype", {}).items():
+                    a["by_dtype"][dt] = a["by_dtype"].get(dt, 0) + trip * w
 
         for ins in self.comp_instrs.get(comp, []):
             m = _DEF_RE.match(ins)
@@ -274,6 +279,8 @@ class HloCost:
                 continue
             head = rest[: rest.index("(")]
             result = sum(_shape_bytes_match(mm) for mm in _SHAPE_RE.finditer(head))
+            sm = _SHAPE_RE.search(head)
+            dtype = sm.group(1) if sm else "?"
             K = self._group_size(ins)
             if op == "all-gather" or op == "all-to-all":
                 wire = result * (K - 1) // K
@@ -283,7 +290,7 @@ class HloCost:
                 wire = result * 2 * (K - 1) // K
             else:
                 wire = result
-            add(op, wire, result)
+            add(op, wire, result, dtype)
         self._memo_coll[comp] = acc
         return acc
 
@@ -320,9 +327,10 @@ def tree_shard_bytes(shardings, abstracts, axis_sizes: dict[str, int],
     ``axis_sizes``: mesh axis extents.  Each leaf contributes
     ``nbytes / prod(extent of every mesh axis its PartitionSpec names)`` —
     the size of the block one device holds.  ``elem_bytes`` overrides each
-    leaf's dtype itemsize; pass 4 to size the ATC combine, whose
-    ``φ = w + u`` promotes bf16 params to the optimizer's f32 updates, so
-    the ppermute rounds move f32 regardless of the stored param dtype."""
+    leaf's dtype itemsize; to size a combine's wire, pass
+    ``diffusion.wire_elem_bytes(combine_dtype)`` — the ppermute rounds
+    move the *wire* dtype (bf16 payloads travel as 2-byte u16, the f32
+    escape hatch as 4-byte), not the stored param dtype."""
     import jax  # local import: this module must stay importable without
     import numpy as np  # touching jax device state (tests parse HLO text)
     total = 0
@@ -339,7 +347,8 @@ def tree_shard_bytes(shardings, abstracts, axis_sizes: dict[str, int],
 
 
 def agent_combine_check(hlo: str, n_dev: int, *, degree: int,
-                        shard_bytes: int, slack: float = 0.25) -> dict:
+                        shard_bytes: int, slack: float = 0.25,
+                        wire_dtype: str | None = None) -> dict:
     """Verify the agent-axis combine's wire cost in post-SPMD HLO.
 
     The ppermute combine must move exactly ``degree`` rounds of one
@@ -348,19 +357,42 @@ def agent_combine_check(hlo: str, n_dev: int, *, degree: int,
     combine that silently stopped being lowered; the upper bound catches
     K-scaling regressions (dense all-gather re-emerging: K·shard ≫
     (1+slack)·deg·shard for any sparse graph) while absorbing small
-    GSPMD resharding permutes.  Returns a record with ``ok`` plus the
-    numbers; raises nothing — callers decide how loud to be."""
+    GSPMD resharding permutes.  ``shard_bytes`` must already be sized at
+    the wire dtype (``tree_shard_bytes(..., elem_bytes=wire_elem_bytes)``)
+    — a bf16 wire halves the whole window, so this check also catches a
+    combine that silently fell back to the f32 wire.
+
+    ``wire_dtype='bfloat16'``: the combine ships its payload bitcast to
+    u16 (see core/diffusion.py's wire-format contract) and is the only
+    u16 traffic in the program, so the window is applied to the u16
+    permute bytes alone.  On meshes with a data axis this is what makes
+    the check usable at all: activation-resharding permutes (bf16/f32)
+    can dwarf the combine, but they can never masquerade as its wire.
+    Other wire dtypes share their permute dtype with resharding traffic,
+    so the window falls back to total permute bytes.
+
+    Returns a record with ``ok`` plus the numbers; raises nothing —
+    callers decide how loud to be."""
     coll = HloCost(hlo, n_dev=n_dev).collectives()
     cp = coll["per_op"].get("collective-permute",
-                            {"count": 0, "bytes": 0, "wire_bytes": 0})
+                            {"count": 0, "bytes": 0, "wire_bytes": 0,
+                             "by_dtype": {}})
+    if wire_dtype == "bfloat16":
+        measured = cp.get("by_dtype", {}).get("u16", 0)
+    else:
+        measured = cp["wire_bytes"]
     expected = degree * shard_bytes
-    ok = expected <= cp["wire_bytes"] <= (1 + slack) * expected
-    return {"degree": degree, "param_shard_bytes": shard_bytes,
-            "expected_permute_bytes": expected,
-            "permute_bytes": cp["wire_bytes"],
-            "permute_count": cp["count"],
-            "total_collective_bytes": coll["total_bytes"],
-            "ok": bool(ok)}
+    ok = expected <= measured <= (1 + slack) * expected
+    rec = {"degree": degree, "param_shard_bytes": shard_bytes,
+           "expected_permute_bytes": expected,
+           "permute_bytes": measured,
+           "all_permute_bytes": cp["wire_bytes"],
+           "permute_count": cp["count"],
+           "total_collective_bytes": coll["total_bytes"],
+           "ok": bool(ok)}
+    if wire_dtype is not None:
+        rec["wire_dtype"] = wire_dtype
+    return rec
 
 
 # ---------------------------------------------------------------------------

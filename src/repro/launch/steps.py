@@ -218,6 +218,8 @@ class TrainBundle:
     loss_fn: Any = None           # (params, batch) -> scalar (single agent)
     mcfg: Any = None              # the assembled MetaConfig
     schedule: Any = None          # TopologySchedule (None when K == 1)
+    outer_dtype: str = ""         # resolved params/grads storage dtype
+    combine_dtype: str = ""       # resolved combine wire format
 
     def make_eval_harness(self, inner_steps: int | None = None):
         """The in-training recurring-vs-unseen eval engine, bound to this
@@ -319,6 +321,13 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
     shape = INPUT_SHAPES[shape_name]
     assert shape.kind in ("train", "prefill")
     dt = DTYPES[cfg.dtype]
+    # Outer-loop storage: params/grads live in out_dt; Adam moments stay
+    # fp32 regardless (adam.init allocates f32, updates come back in
+    # p.dtype).  Activations/inputs keep cfg.dtype.
+    outer_dtype = cfg.outer_dtype or cfg.dtype
+    out_dt = DTYPES[outer_dtype]
+    wire_dtype = diffusion.resolve_combine_dtype(outer_dtype,
+                                                 cfg.combine_dtype or None)
     model = build_model(cfg)
     agent_mesh = "agent" in mesh.axis_names
     intra_agent_data = "data" in mesh.axis_names and (
@@ -349,7 +358,7 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
     rules = rules_for(cfg, mesh, kind="train")
     p_specs = with_agent_axis(model.specs(), K)
     p_axes = axes_tree(p_specs)
-    p_abs = abstract(p_specs, dt)
+    p_abs = abstract(p_specs, out_dt)
     params_sh = tree_shardings(p_axes, p_abs, rules, mesh)
 
     multi_pod = "pod" in mesh.axis_names
@@ -392,7 +401,7 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
         param_specs = jax.tree.map(lambda s: s.spec, params_sh)
         combine_fn = diffusion.make_combine(
             backend, A=A, axis_name=agent_axis, mesh=mesh,
-            in_specs=param_specs)
+            in_specs=param_specs, combine_dtype=wire_dtype)
     freeze_mask = None
     if cfg.inner_freeze:
         # ANIL-style: the named subtree (e.g. 'encoder') is frozen in the
@@ -432,12 +441,13 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
 
     def init_state_fn(seed: int = 0) -> TrainState:
         keys = jax.random.split(jax.random.key(seed), K)
-        params = jax.vmap(lambda k: model.init(k, dt))(keys)
+        params = jax.vmap(lambda k: model.init(k, out_dt))(keys)
         return TrainState(jnp.zeros((), jnp.int32), params, opt.init(params))
 
     return TrainBundle(cfg, mesh, K, T, tb, train_step, state_abs, state_sh,
                        batch_sh, init_state_fn, loss_fn=model.loss_fn,
-                       mcfg=mcfg, schedule=sched)
+                       mcfg=mcfg, schedule=sched, outer_dtype=outer_dtype,
+                       combine_dtype=wire_dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -29,6 +29,7 @@ boundaries; C=1 reproduces the legacy per-step loop step-for-step.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -38,7 +39,7 @@ import jax
 from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
 from repro.configs import INPUT_SHAPES, get_config
 from repro.configs.base import InputShape
-from repro.core import topology, update
+from repro.core import diffusion, topology, update
 from repro.data.lm_tasks import LMTaskSource
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch import steps as S
@@ -148,6 +149,17 @@ def main() -> None:
                          "(shorthand for --combine fused): clip scale, "
                          "optimizer moments and launch-model mix in a "
                          "single kernel sweep over the parameter bytes")
+    ap.add_argument("--outer-dtype", default=None,
+                    choices=sorted(S.DTYPES),
+                    help="params/grads storage dtype for the outer loop "
+                         "(Adam moments stay fp32); defaults to the arch's "
+                         "dtype")
+    ap.add_argument("--combine-dtype", default=None,
+                    choices=sorted(diffusion.WIRE_DTYPES),
+                    help="combine wire format for the ppermute backends; "
+                         "defaults to bfloat16 when the outer dtype is "
+                         "bfloat16 (f32 escape hatch: --combine-dtype "
+                         "float32)")
     args = ap.parse_args()
     if args.fused_outer:
         if args.combine not in (None, "fused"):
@@ -157,6 +169,10 @@ def main() -> None:
         args.combine = "fused"
 
     cfg = get_config(args.arch)
+    if args.outer_dtype or args.combine_dtype:
+        cfg = dataclasses.replace(
+            cfg, outer_dtype=args.outer_dtype or cfg.outer_dtype,
+            combine_dtype=args.combine_dtype or cfg.combine_dtype)
     if args.reduced:
         cfg = cfg.reduced()
         shape = InputShape("custom", args.seq, args.global_batch, "train")
@@ -228,6 +244,8 @@ def main() -> None:
                       mode=ucfg.inner, strategy=ucfg.strategy,
                       combine_backend=ucfg.backend,
                       fused_outer=ucfg.backend == "fused",
+                      outer_dtype=bundle.outer_dtype,
+                      combine_dtype=bundle.combine_dtype,
                       topology_schedule=args.topology_schedule,
                       link_failure_p=(args.link_failure_p
                                       if args.topology_schedule
