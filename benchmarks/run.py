@@ -382,7 +382,7 @@ with mesh:
     for bname, Amat, extra in [
             ("mesh_sparse", ring.matrix, ()),
             ("mesh_sparse_dynamic", rr.stacked(), (step0,))]:
-        rec = {}
+        rec, lint = {}, {}
         for wire in ["float32", "bfloat16"]:
             fn = jax.jit(diffusion.make_combine(
                 bname, A=Amat, mesh=mesh, axis_name="data",
@@ -394,6 +394,17 @@ with mesh:
                          "by_dtype": cp["by_dtype"],
                          "us": timed(fn, phi_bf, *extra),
                          "out": fn(phi_bf, *extra)}
+            if wire == "bfloat16":
+                # the u16-wire invariant now lives in the lint registry:
+                # deg=2 on the K=8 ring, shard = M bf16 elems = 2M wire B
+                from repro.analysis.rules import LintContext, run_rules
+                ctx = LintContext(hlo=txt, n_dev=K, K=K, degree=2,
+                                  shard_bytes=M * 2, wire_dtype="bfloat16")
+                rep = run_rules(ctx, only=["collective-budget",
+                                           "wire-dtype-leak"])
+                lint = {"ok": rep.to_json()["ok"],
+                        "checked": rep.checked,
+                        "findings": [f.message for f in rep.findings]}
         err = float(jnp.max(jnp.abs(
             rec["bfloat16"]["out"]["w"].astype(jnp.float32)
             - rec["float32"]["out"]["w"].astype(jnp.float32))))
@@ -403,7 +414,8 @@ with mesh:
             "by_dtype_bf16": rec["bfloat16"]["by_dtype"],
             "us_bf16": rec["bfloat16"]["us"],
             "us_f32": rec["float32"]["us"],
-            "max_err_vs_f32_wire": err}
+            "max_err_vs_f32_wire": err,
+            "lint": lint}
 print("BENCH_JSON:" + json.dumps(out))
 """
 
@@ -441,6 +453,7 @@ def bench_combine_dynamic(quick: bool):
                  f"wire_f32={rec['wire_bytes_f32']};"
                  f"bytes_ratio={ratio:.3f};"
                  f"within_055={ratio <= 0.55};K=8;"
+                 f"lint_clean={rec['lint'].get('ok', False)};"
                  f"max_err_vs_f32_wire={rec['max_err_vs_f32_wire']:.2e}")
             continue
         dense, sp = rec["dense"], rec["sparse_dynamic"]

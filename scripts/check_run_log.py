@@ -28,6 +28,10 @@ def main() -> None:
     ap.add_argument("--no-eval", action="store_true",
                     help="skip the EvalHarness-record checks (smokes that "
                          "run without --eval-every)")
+    ap.add_argument("--expect-analysis", action="store_true",
+                    help="require a kind=analysis record (the trainer's "
+                         "post-run retrace-guard lint): no findings, and "
+                         "jit compile count within the expected budget")
     args = ap.parse_args()
     path = args.path
 
@@ -56,6 +60,31 @@ def main() -> None:
                    for r in configs), \
             f"--expect-fused but config records say " \
             f"{[(r['combine_backend'], r['fused_outer']) for r in configs]}"
+
+    if args.expect_analysis:
+        analyses = [r for r in records if r.get("kind") == "analysis"]
+        assert analyses, \
+            f"--expect-analysis but no analysis record in {path} " \
+            f"(kinds: {kinds})"
+        for rec in analyses:
+            assert rec.get("ok"), \
+                f"analysis record has findings: {rec.get('findings')}"
+            assert "retrace-guard" in rec.get("checked", []), \
+                f"analysis record did not run retrace-guard: " \
+                f"{rec.get('checked')}"
+            compiles = rec.get("jit_compiles")
+            # None = a jax build without a readable jit cache size; the
+            # jaxpr-level checks above still gate the record
+            if compiles is not None:
+                assert compiles <= rec["expected_compiles"], \
+                    f"superstep compiled {compiles}x, expected at most " \
+                    f"{rec['expected_compiles']} (over " \
+                    f"{rec.get('dispatches')} dispatches)"
+        a = analyses[-1]
+        print(f"ok: {path} analysis record clean "
+              f"(compiles={a.get('jit_compiles')}/"
+              f"{a.get('expected_compiles')}, "
+              f"checked={a.get('checked')})")
 
     if args.no_eval:
         print(f"ok: {path} has {len(configs)} config record(s) "

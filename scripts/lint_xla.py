@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""CI gate: lint the pinned production configs' compiled programs.
+
+Lowers each requested arch × agent-mesh train step devicelessly (forced
+host devices, AOT compile — no arrays materialized) and runs the full
+``repro.analysis`` rule registry over the compiled HLO and traced jaxpr.
+Exits non-zero on any finding; writes the JSON report for the CI artifact.
+
+Usage:
+  PYTHONPATH=src python scripts/lint_xla.py --arch qwen2-7b --agents 16,8
+  PYTHONPATH=src python scripts/lint_xla.py \\
+      --arch qwen2-7b,mixtral-8x22b,deepseek-v2-lite-16b \\
+      --out results/lint_xla.json
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# jax locks the device count at first initialization — these must be set
+# before anything imports jax (same contract as launch/dryrun.py).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b",
+                    help="comma-separated arch list")
+    ap.add_argument("--agents", default="16,8",
+                    help="comma-separated agent-mesh extents (16 → 2D "
+                         "(agent, model) collapse; 8 → 3D (agent, data, "
+                         "model))")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--combine", default="mesh_sparse_dynamic")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON findings report here")
+    args = ap.parse_args()
+
+    from repro.analysis.run import lint_matrix
+
+    archs = [a for a in args.arch.split(",") if a]
+    agents = [int(a) for a in args.agents.split(",") if a]
+    records, n_findings = lint_matrix(archs, agents, args.shape,
+                                      combine=args.combine)
+    report = {"ok": n_findings == 0, "n_findings": n_findings,
+              "records": records}
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"[lint-xla] report → {args.out}")
+    if n_findings:
+        print(f"[lint-xla] FAILED: {n_findings} finding(s)")
+        return 1
+    print(f"[lint-xla] clean: {len(records)} program(s), "
+          f"{sum(len(r['lint']['checked']) for r in records)} rule runs")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,22 @@
+"""Static analysis over compiled programs: the HLO/jaxpr lint registry.
+
+``repro.analysis.rules`` owns every compiled-program invariant (one rule
+per invariant, declaratively registered); ``repro.analysis.run`` lowers
+config × mesh matrices devicelessly and runs the registry;
+``repro.analysis.hlo`` parses HLO computation graphs.  See ANALYSIS.md
+for the rule catalog and conventions.
+
+This package root re-exports the text-only surface and imports no jax.
+"""
+
+from repro.analysis.rules import (  # noqa: F401
+    RULES,
+    CompileCounter,
+    Finding,
+    LintContext,
+    LintReport,
+    Rule,
+    combine_window,
+    register_rule,
+    run_rules,
+)

@@ -591,6 +591,11 @@ class CombineBackend:
     needs_matrix: bool = True
     needs_mesh: bool = False
     needs_axis_name: bool = False
+    # Whether the lowered combine moves its payload over collective-permutes
+    # — the backends the wire-dtype / deg·shard lint rules can reason about.
+    # Dense/pallas/centralized combines exchange nothing (replicated math)
+    # or use other collectives, so permute-based rules skip them.
+    emits_permutes: bool = False
 
 
 _BACKENDS: dict[str, CombineBackend] = {}
@@ -608,6 +613,26 @@ def register_backend(name: str, **flags: bool):
 
 def combine_backends() -> tuple[str, ...]:
     return tuple(_BACKENDS)
+
+
+def backend_lint_metadata(name: str, combine_dtype: str | None = None) -> dict:
+    """What the compiled-program lint rules may assume about a backend.
+
+    ``emits_permutes`` gates the permute-window rules (a dense/pallas
+    combine exchanges nothing over collective-permutes); ``wire_hlo_dtype``
+    is the HLO-level dtype the payload travels in — ``u16`` for the bf16
+    bitcast wire, ``f32`` otherwise (see the wire-format contract above).
+    """
+    if name not in _BACKENDS:
+        raise ValueError(
+            f"unknown combine backend {name!r}; "
+            f"pick one of {sorted(_BACKENDS)}")
+    b = _BACKENDS[name]
+    return {
+        "backend": name,
+        "emits_permutes": b.emits_permutes,
+        "wire_hlo_dtype": "u16" if combine_dtype == "bfloat16" else "f32",
+    }
 
 
 def _stepless(fn: Callable[[PyTree], PyTree]) -> CombineFn:
@@ -665,19 +690,20 @@ def _build_dense(*, A, **_ctx) -> CombineFn:
     return _stepless(functools.partial(dense_combine, Aj))
 
 
-@register_backend("sparse_host")
+@register_backend("sparse_host", emits_permutes=True)
 def _build_sparse_host(*, A, **_ctx) -> CombineFn:
     return _stepless(functools.partial(
         sparse_combine_host, _reject_stacked(A, "sparse_host")))
 
 
-@register_backend("sparse", needs_axis_name=True)
+@register_backend("sparse", needs_axis_name=True, emits_permutes=True)
 def _build_sparse(*, A, axis_name, combine_dtype=None, **_ctx) -> CombineFn:
     return _stepless(make_sparse_combine(_reject_stacked(A, "sparse"),
                                          axis_name, wire_dtype=combine_dtype))
 
 
-@register_backend("mesh_sparse", needs_mesh=True, needs_axis_name=True)
+@register_backend("mesh_sparse", needs_mesh=True, needs_axis_name=True,
+                  emits_permutes=True)
 def _build_mesh_sparse(*, A, mesh, axis_name, in_specs=None,
                        combine_dtype=None, **_ctx) -> CombineFn:
     A = _reject_stacked(A, "mesh_sparse")
@@ -699,12 +725,13 @@ def _check_agent_extent(name: str, mesh, axis_name: str, K: int) -> None:
             f"placement).")
 
 
-@register_backend("sparse_host_dynamic")
+@register_backend("sparse_host_dynamic", emits_permutes=True)
 def _build_sparse_host_dynamic(*, A, **_ctx) -> CombineFn:
     return make_sparse_host_dynamic_combine(_ir_for(A))
 
 
-@register_backend("sparse_dynamic", needs_axis_name=True)
+@register_backend("sparse_dynamic", needs_axis_name=True,
+                  emits_permutes=True)
 def _build_sparse_dynamic(*, A, axis_name, combine_dtype=None, **_ctx
                           ) -> CombineFn:
     return make_sparse_dynamic_combine(_ir_for(A), axis_name,
@@ -712,7 +739,7 @@ def _build_sparse_dynamic(*, A, axis_name, combine_dtype=None, **_ctx
 
 
 @register_backend("mesh_sparse_dynamic", needs_mesh=True,
-                  needs_axis_name=True)
+                  needs_axis_name=True, emits_permutes=True)
 def _build_mesh_sparse_dynamic(*, A, mesh, axis_name, in_specs=None,
                                combine_dtype=None, **_ctx) -> CombineFn:
     ir = _ir_for(A)

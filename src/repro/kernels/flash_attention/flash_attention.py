@@ -91,7 +91,12 @@ def flash_attention_fwd_lse(q: jax.Array, k: jax.Array, v: jax.Array, *,
     Sk = k.shape[2]
     block_q = min(block_q, S)
     block_k = min(block_k, Sk)
-    assert S % block_q == 0 and Sk % block_k == 0
+    if S % block_q or Sk % block_k:
+        raise ValueError(
+            f"flash_attention_fwd_lse needs block-aligned sequence "
+            f"lengths: seq_q={S} % block_q={block_q} = {S % block_q}, "
+            f"seq_k={Sk} % block_k={block_k} = {Sk % block_k} — pad "
+            f"the sequence or pick blocks dividing it")
     scale = 1.0 / np.sqrt(d)
     grid = (B, H, S // block_q, Sk // block_k)
     kernel = functools.partial(

@@ -111,7 +111,12 @@ def flash_attention_bwd(q, k, v, out, lse, do, *, causal=True, window=None,
     Sk = k.shape[2]
     block_q = min(block_q, S)
     block_k = min(block_k, Sk)
-    assert S % block_q == 0 and Sk % block_k == 0
+    if S % block_q or Sk % block_k:
+        raise ValueError(
+            f"flash_attention_bwd needs block-aligned sequence lengths: "
+            f"seq_q={S} % block_q={block_q} = {S % block_q}, "
+            f"seq_k={Sk} % block_k={block_k} = {Sk % block_k} — pad "
+            f"the sequence or pick blocks dividing it")
     scale = 1.0 / np.sqrt(d)
     dsum = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
                    axis=-1)                                       # (B,H,S)

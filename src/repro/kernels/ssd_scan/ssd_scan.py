@@ -77,7 +77,11 @@ def ssd_scan_pallas(x: jax.Array, dt: jax.Array, A: jax.Array,
     Returns (y (B,L,H,P), final_state (B,H,P,N))."""
     B, L, H, P = x.shape
     N = Bm.shape[-1]
-    assert L % chunk == 0, (L, chunk)
+    if L % chunk:
+        raise ValueError(
+            f"ssd_scan_pallas needs the sequence length to be a multiple "
+            f"of the chunk: L={L} % chunk={chunk} = {L % chunk} — pad the "
+            f"sequence or pick a chunk dividing it")
     nc = L // chunk
     A2 = A.reshape(H, 1)
     grid = (B, H, nc)

@@ -123,23 +123,10 @@ def _mem_dict(mem) -> dict:
     return {f: getattr(mem, f) for f in fields}
 
 
-# Pinned agent-mesh budgets: per-device collective bytes per train step for
-# the acceptance configs on make_production_mesh(agents=K) with the
-# mesh_sparse_dynamic ring combine on the bf16 wire (the default: these
-# archs store bf16 outer state, so resolve_combine_dtype picks the
-# u16-bitcast half-width wire).  Measured on this revision, ceiling =
-# measured × 1.05.  --assert-budgets fails the run if a config exceeds its
-# ceiling (TP all-reduces ballooning) or if the combine's collective-permute
-# bytes leave the deg·shard window (agent_combine_check) — the regression
-# pins for the agent-mesh composition.  The agents=8 entry is the 3D
-# (agent=8, data=2, model=16) mesh; its data axis adds all-gather /
-# resharding traffic the 2D collapse never pays, so it carries its own pin.
-AGENT_MESH_BUDGETS: dict[tuple[str, str, int], int] = {
-    ("qwen2-7b", "train_4k", 16): 412_000_000_000,          # meas 3.922e11
-    ("qwen2-7b", "train_4k", 8): 497_000_000_000,           # meas 4.729e11
-    ("mixtral-8x22b", "train_4k", 16): 2_771_000_000_000,   # meas 2.639e12
-    ("deepseek-v2-lite-16b", "train_4k", 16): 1_149_000_000_000,  # 1.095e12
-}
+# The pinned agent-mesh budgets moved to repro.analysis.run (the lint
+# driver owns every compiled-program invariant); re-exported here for the
+# existing consumers of this module's surface.
+from repro.analysis.run import AGENT_MESH_BUDGETS  # noqa: E402,F401
 
 
 def _mesh_tag(mesh, multi_pod: bool, agents: int | None) -> str:
@@ -236,43 +223,30 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         **extra,
     }
     if agents is not None and shape.kind == "train":
-        from repro.compat import mesh_axis_sizes
-        from repro.core import diffusion
-        from repro.launch.hlo_cost import agent_combine_check, tree_shard_bytes
-        # The combine permutes the *wire* dtype (bf16 payloads travel as
-        # 2-byte u16; the f32 escape hatch moves 4) — derive elem_bytes
-        # from the bundle's resolved format so the window tracks the wire.
-        wire = bundle.combine_dtype
-        shard = tree_shard_bytes(bundle.state_shardings.params,
-                                 bundle.state_specs.params,
-                                 mesh_axis_sizes(mesh),
-                                 elem_bytes=diffusion.wire_elem_bytes(wire))
-        deg = bundle.schedule.ir().degree if bundle.schedule else 0
-        budget = agent_combine_check(hlo, n_dev, degree=deg,
-                                     shard_bytes=shard, wire_dtype=wire)
+        # Delegate every compiled-program invariant to the lint registry
+        # (repro.analysis) — the deg·shard permute window, the bf16→u16
+        # wire check, and the pinned per-config collective ceiling all
+        # live there now; this block only reports and (under
+        # --assert-budgets) raises on findings.
+        from repro.analysis.rules import run_rules
+        from repro.analysis.run import context_for_bundle
+        ceiling = AGENT_MESH_BUDGETS.get((arch, shape_name, agents))
+        ctx = context_for_bundle(bundle, hlo, ceiling=ceiling)
+        report = run_rules(ctx,
+                           only=["collective-budget", "wire-dtype-leak"])
+        budget = report.records["collective-budget"]
         rec["combine_budget"] = budget
-        print(f"  combine_budget: deg={deg} × shard {shard:.3e} B "
+        rec["lint"] = report.to_json()
+        wire, deg = bundle.combine_dtype, budget["degree"]
+        print(f"  combine_budget: deg={deg} × shard "
+              f"{budget['param_shard_bytes']:.3e} B "
               f"({wire} wire) → permute {budget['permute_bytes']:.3e} B "
-              f"({'ok' if budget['ok'] else 'VIOLATION'}), "
+              f"({'ok' if report.ok else 'VIOLATION'}), "
               f"total coll {budget['total_collective_bytes']:.3e} B")
-        if assert_budgets:
-            if not budget["ok"]:
-                raise AssertionError(
-                    f"{arch} × {shape_name} × {rec['mesh']}: combine "
-                    f"collective-permute bytes {budget['permute_bytes']:.3e} "
-                    f"outside the deg·shard window "
-                    f"[{budget['expected_permute_bytes']:.3e}, "
-                    f"{1.25 * budget['expected_permute_bytes']:.3e}] — "
-                    f"the ring combine must move deg={deg} per-agent "
-                    f"shards, not K")
-            ceiling = AGENT_MESH_BUDGETS.get((arch, shape_name, agents))
-            if ceiling is not None and coll["total_bytes"] > ceiling:
-                raise AssertionError(
-                    f"{arch} × {shape_name} × {rec['mesh']}: total "
-                    f"collective bytes {coll['total_bytes']:.3e} exceed the "
-                    f"pinned budget {ceiling:.3e} — TP/FSDP collectives "
-                    f"regressed (or re-pin AGENT_MESH_BUDGETS with the "
-                    f"measured number if the change is intentional)")
+        if assert_budgets and not report.ok:
+            raise AssertionError(
+                f"{arch} × {shape_name} × {rec['mesh']}: " +
+                "; ".join(f.message for f in report.findings))
     print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}"
           f" ok: {rec['flops_per_device']:.3e} flops/dev,"
           f" {rec['bytes_per_device']:.3e} B/dev,"

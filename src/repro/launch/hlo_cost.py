@@ -20,7 +20,7 @@ inside scans in this codebase — the combine happens once per step).
 from __future__ import annotations
 
 import re
-from collections import defaultdict
+
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
                 "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
@@ -334,7 +334,8 @@ def tree_shard_bytes(shardings, abstracts, axis_sizes: dict[str, int],
     import jax  # local import: this module must stay importable without
     import numpy as np  # touching jax device state (tests parse HLO text)
     total = 0
-    for sh, ab in zip(jax.tree.leaves(shardings), jax.tree.leaves(abstracts)):
+    for sh, ab in zip(jax.tree.leaves(shardings), jax.tree.leaves(abstracts),
+                      strict=True):
         spec = getattr(sh, "spec", sh)
         div = 1
         for part in spec:
@@ -351,48 +352,16 @@ def agent_combine_check(hlo: str, n_dev: int, *, degree: int,
                         wire_dtype: str | None = None) -> dict:
     """Verify the agent-axis combine's wire cost in post-SPMD HLO.
 
-    The ppermute combine must move exactly ``degree`` rounds of one
-    per-device parameter shard: total collective-permute wire bytes in
-    ``[deg·shard, (1+slack)·deg·shard]``.  The lower bound catches a
-    combine that silently stopped being lowered; the upper bound catches
-    K-scaling regressions (dense all-gather re-emerging: K·shard ≫
-    (1+slack)·deg·shard for any sparse graph) while absorbing small
-    GSPMD resharding permutes.  ``shard_bytes`` must already be sized at
-    the wire dtype (``tree_shard_bytes(..., elem_bytes=wire_elem_bytes)``)
-    — a bf16 wire halves the whole window, so this check also catches a
-    combine that silently fell back to the f32 wire.
-
-    ``wire_dtype='bfloat16'``: the combine ships its payload bitcast to
-    u16 (see core/diffusion.py's wire-format contract) and is the only
-    u16 traffic in the program, so the window is applied to the u16
-    permute bytes alone.  On meshes with a data axis this is what makes
-    the check usable at all: activation-resharding permutes (bf16/f32)
-    can dwarf the combine, but they can never masquerade as its wire.
-    Other wire dtypes share their permute dtype with resharding traffic,
-    so the window falls back to total permute bytes.
-
-    Returns a record with ``ok`` plus the numbers; raises nothing —
-    callers decide how loud to be."""
-    coll = HloCost(hlo, n_dev=n_dev).collectives()
-    cp = coll["per_op"].get("collective-permute",
-                            {"count": 0, "bytes": 0, "wire_bytes": 0,
-                             "by_dtype": {}})
-    if wire_dtype == "bfloat16":
-        measured = cp.get("by_dtype", {}).get("u16", 0)
-    else:
-        measured = cp["wire_bytes"]
-    expected = degree * shard_bytes
-    ok = expected <= measured <= (1 + slack) * expected
-    rec = {"degree": degree, "param_shard_bytes": shard_bytes,
-           "expected_permute_bytes": expected,
-           "permute_bytes": measured,
-           "all_permute_bytes": cp["wire_bytes"],
-           "permute_count": cp["count"],
-           "total_collective_bytes": coll["total_bytes"],
-           "ok": bool(ok)}
-    if wire_dtype is not None:
-        rec["wire_dtype"] = wire_dtype
-    return rec
+    Legacy entry point: the implementation moved to
+    :func:`repro.analysis.rules.combine_window` (the one owner of the
+    deg·shard window, shared with the ``collective-budget`` lint rule) —
+    this shim delegates bit-for-bit.  Lazy import keeps this module's
+    no-jax import contract and avoids a cycle (analysis.rules imports
+    :class:`HloCost` from here)."""
+    from repro.analysis.rules import combine_window
+    return combine_window(hlo, n_dev, degree=degree,
+                          shard_bytes=shard_bytes, slack=slack,
+                          wire_dtype=wire_dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -220,6 +220,7 @@ class TrainBundle:
     schedule: Any = None          # TopologySchedule (None when K == 1)
     outer_dtype: str = ""         # resolved params/grads storage dtype
     combine_dtype: str = ""       # resolved combine wire format
+    combine_backend: str = ""     # resolved combine backend ('auto' applied)
 
     def make_eval_harness(self, inner_steps: int | None = None):
         """The in-training recurring-vs-unseen eval engine, bound to this
@@ -301,6 +302,39 @@ class TrainBundle:
         return MetaBatchPipeline(source, depth=depth, prepare=prepare,
                                  start_step=start_step,
                                  stack=1 if stack is None else stack)
+
+    def lint_metadata(self) -> dict:
+        """The facts the compiled-program lint rules (``repro.analysis``)
+        need about this bundle's train step: mesh geometry, the combine's
+        schedule degree and per-device wire-shard size, backend wire
+        metadata, and the donated-leaf count — derived here, in the one
+        place that owns the bundle's sharding and combine resolution."""
+        from repro.compat import mesh_axis_sizes
+        from repro.launch.hlo_cost import tree_shard_bytes
+        sizes = mesh_axis_sizes(self.mesh)
+        deg = self.schedule.ir().degree if self.schedule is not None else 0
+        shard = tree_shard_bytes(
+            self.state_shardings.params, self.state_specs.params, sizes,
+            elem_bytes=diffusion.wire_elem_bytes(self.combine_dtype))
+        backend = self.combine_backend or "none"
+        try:
+            bmeta = diffusion.backend_lint_metadata(backend,
+                                                    self.combine_dtype)
+        except ValueError:
+            bmeta = {"backend": backend, "emits_permutes": False,
+                     "wire_hlo_dtype": "f32"}
+        ucfg = self.mcfg.update_config if self.mcfg is not None else None
+        return {
+            "n_dev": int(np.prod(self.mesh.devices.shape)),
+            "mesh_axes": dict(sizes),
+            "K": self.K,
+            "degree": int(deg),
+            "shard_bytes": int(shard),
+            "wire_dtype": self.combine_dtype,
+            "combine_every": int(getattr(ucfg, "combine_every", 1) or 1),
+            "expected_aliases": len(jax.tree.leaves(self.state_specs)),
+            **bmeta,
+        }
 
 
 def opt_state_axes(opt_name: str, params_axes: PyTree) -> PyTree:
@@ -384,6 +418,14 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
     # Stacked (dynamic) schedules: static sparse backends upgrade to their
     # *_dynamic siblings (same permute rounds, step-gathered weights)
     backend = diffusion.resolve_schedule_backend(backend, A)
+    # The name the lint layer sees must be the backend actually lowered —
+    # resolve 'auto' the same way make_combine will, and record 'none'
+    # when no combine is injected at all (K=1 / strategies without one).
+    if backend == "auto":
+        resolved_backend = diffusion.select_backend(A, mesh=mesh,
+                                                    axis_name=agent_axis)
+    else:
+        resolved_backend = backend
     combine_fn = None
     if backend == "fused":
         # One-pass combine-then-update: make_meta_step builds the fused
@@ -402,6 +444,8 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
         combine_fn = diffusion.make_combine(
             backend, A=A, axis_name=agent_axis, mesh=mesh,
             in_specs=param_specs, combine_dtype=wire_dtype)
+    else:
+        resolved_backend = "none"
     freeze_mask = None
     if cfg.inner_freeze:
         # ANIL-style: the named subtree (e.g. 'encoder') is frozen in the
@@ -447,7 +491,8 @@ def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
     return TrainBundle(cfg, mesh, K, T, tb, train_step, state_abs, state_sh,
                        batch_sh, init_state_fn, loss_fn=model.loss_fn,
                        mcfg=mcfg, schedule=sched, outer_dtype=outer_dtype,
-                       combine_dtype=wire_dtype)
+                       combine_dtype=wire_dtype,
+                       combine_backend=resolved_backend)
 
 
 # ---------------------------------------------------------------------------

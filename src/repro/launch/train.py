@@ -221,8 +221,15 @@ def main() -> None:
             state = restore_checkpoint(ckpt_dir, state)
             print(f"[train] restored step {int(state.step)}")
         C = max(1, args.steps_per_dispatch)
+        # Commit the state to its steady-state shardings up front and pin
+        # the step output to the same layout: an uncommitted init state
+        # compiles the superstep once with unspecified input layouts, then
+        # the committed state it returns forces a second compile of the
+        # identical program — retrace-guard counts that as a cache miss.
+        state = jax.device_put(state, bundle.state_shardings)
         superstep_fn = jax.jit(S.make_superstep(bundle.step_fn),
-                               donate_argnums=(0,))
+                               donate_argnums=(0,),
+                               out_shardings=(bundle.state_shardings, None))
         source = make_train_source(cfg, shape, bundle.K, bundle.T, bundle.tb,
                                    seed=args.seed)
         print(f"[train] task source: {source.n_train_domains} domains "
@@ -305,6 +312,35 @@ def main() -> None:
                     save_checkpoint(ckpt_dir, int(state.step), state)
         if ckpt_dir:
             save_checkpoint(ckpt_dir, int(state.step), state)
+        # Post-run compiled-program lint (repro.analysis): retrace-guard
+        # checks the traced step for weak-type python scalars and host
+        # callbacks, and asserts the superstep driver compiled exactly
+        # once per batch shape — 1, plus 1 more only when a final partial
+        # dispatch (steps % C != 0) forced a second shape.  The record
+        # lands in the run log for check_run_log.py --expect-analysis.
+        from repro.analysis.rules import CompileCounter, run_rules
+        from repro.analysis.run import context_for_bundle
+        dispatches = -(-args.steps // C)
+        expected_compiles = 1 + (1 if args.steps % C else 0)
+        compiles = CompileCounter(superstep_fn).count()
+        try:
+            jaxpr = jax.make_jaxpr(bundle.step_fn)(
+                bundle.state_specs, S.input_specs(cfg, shape_name))
+        except Exception:
+            jaxpr = None  # best-effort: compile counts still checked
+        ctx = context_for_bundle(
+            bundle, jaxpr=jaxpr,
+            compile_counts={"superstep": {"compiles": compiles,
+                                          "expected": expected_compiles,
+                                          "dispatches": dispatches}})
+        report = run_rules(ctx, only=["retrace-guard"])
+        run_log.write(kind="analysis", **report.to_json(),
+                      jit_compiles=compiles,
+                      expected_compiles=expected_compiles,
+                      dispatches=dispatches)
+        if not report.ok:
+            for f in report.findings:
+                print(f"[analysis] FINDING[{f.rule}] {f.message}")
     run_log.close()
     print(f"[train] done (run log: {log_path})")
 

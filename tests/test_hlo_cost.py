@@ -123,15 +123,32 @@ _DYNAMIC_BYTES_SCRIPT = textwrap.dedent("""
                 rec[name + "_count"] = coll["total_count"]
                 rec[name + "_permutes"] = coll["per_op"].get(
                     "collective-permute", {}).get("count", 0)
+                if topo_name == "ring" and name == "sparse":
+                    # bit-parity fixture: legacy agent_combine_check vs the
+                    # collective-budget rule, clean + seeded-violation
+                    from repro.analysis.rules import LintContext, run_rules
+                    from repro.launch.hlo_cost import agent_combine_check
+                    deg, par = sched.ir().degree, {}
+                    for case, sb in [("ok", M * 4), ("violated", M * 16)]:
+                        legacy = agent_combine_check(txt, K, degree=deg,
+                                                     shard_bytes=sb)
+                        ctx = LintContext(hlo=txt, n_dev=K, K=K, degree=deg,
+                                          shard_bytes=sb)
+                        rep = run_rules(ctx, only=["collective-budget"])
+                        par[case] = {
+                            "legacy": legacy,
+                            "rule_record": rep.records["collective-budget"],
+                            "rule_ok": rep.to_json()["ok"]}
+                    out["parity"] = par
             out[topo_name] = rec
     print("HLO_BYTES_JSON:" + json.dumps(out))
 """)
 
 
-def test_sparse_dynamic_collective_bytes_scale_with_deg_not_K():
-    """At K=8 the sparse_dynamic combine must move deg permutes of one
-    shard each: deg=2 on the ring, deg=7 on the full graph — and the ring
-    must stay under the (deg+1)/K bound of the dense-stacked bytes."""
+@pytest.fixture(scope="module")
+def dynamic_bytes_out():
+    """One 8-host-device subprocess serving every K=8-ring HLO assertion
+    in this module (compiles are the cost; the parsing is free)."""
     env = dict(os.environ)
     env["JAX_PLATFORMS"] = "cpu"
     env.pop("XLA_FLAGS", None)
@@ -142,7 +159,15 @@ def test_sparse_dynamic_collective_bytes_scale_with_deg_not_K():
     lines = [l for l in res.stdout.splitlines()
              if l.startswith("HLO_BYTES_JSON:")]
     assert lines, res.stderr[-2000:]
-    out = json.loads(lines[0][len("HLO_BYTES_JSON:"):])
+    return json.loads(lines[0][len("HLO_BYTES_JSON:"):])
+
+
+def test_sparse_dynamic_collective_bytes_scale_with_deg_not_K(
+        dynamic_bytes_out):
+    """At K=8 the sparse_dynamic combine must move deg permutes of one
+    shard each: deg=2 on the ring, deg=7 on the full graph — and the ring
+    must stay under the (deg+1)/K bound of the dense-stacked bytes."""
+    out = dynamic_bytes_out
     shard = out["shard_bytes"]
     ring, full = out["ring"], out["full"]
     assert (ring["deg"], full["deg"]) == (2, 7)
@@ -155,3 +180,63 @@ def test_sparse_dynamic_collective_bytes_scale_with_deg_not_K():
     # acceptance bound: ring sparse ≤ (deg+1)/K of the dense-stacked bytes
     assert ring["dense_bytes"] > 0
     assert ring["sparse_bytes"] <= (ring["deg"] + 1) / 8 * ring["dense_bytes"]
+
+
+def test_collective_budget_rule_bit_parity_on_k8_ring(dynamic_bytes_out):
+    """agent_combine_check is now a shim over the collective-budget rule's
+    combine_window: on the K=8 ring fixture the legacy record and the
+    rule's record must match field-for-field, and their verdicts must
+    agree on both the clean and the seeded-violation (shard×4) case."""
+    par = dynamic_bytes_out["parity"]
+    for case, should_pass in [("ok", True), ("violated", False)]:
+        legacy, rule = par[case]["legacy"], par[case]["rule_record"]
+        assert legacy == rule, (case, legacy, rule)
+        assert legacy["ok"] is should_pass
+        assert par[case]["rule_ok"] is should_pass
+
+
+# ---------------------------------------------------------------------------
+# Per-dtype collective accounting (the bf16-wire budget windows filter on it)
+# ---------------------------------------------------------------------------
+
+_MIXED_DTYPE_HLO = textwrap.dedent("""
+    HloModule mixed
+
+    %add (a: s32[], b: s32[]) -> s32[] {
+      %a = s32[] parameter(0)
+      %b = s32[] parameter(1)
+      ROOT %r = s32[] add(%a, %b)
+    }
+
+    ENTRY %main (p0: f32[16]) -> f32[16] {
+      %p0 = f32[16]{0} parameter(0)
+      %cp0 = u16[1000]{0} collective-permute(%x0), source_target_pairs={{0,1},{1,0}}
+      %cp1 = u16[500]{0} collective-permute(%x1), source_target_pairs={{0,1},{1,0}}
+      %cp2 = f32[250]{0} collective-permute(%x2), source_target_pairs={{0,1},{1,0}}
+      %ar0 = s32[100]{0} all-reduce(%x3), replica_groups={{0,1}}, to_apply=%add
+      %ag0 = f32[64]{0} all-gather(%x4), replica_groups={{0,1}}, dimensions={0}
+    }
+""")
+
+
+def test_comp_collectives_per_dtype_accounting():
+    """by_dtype must split wire bytes by element type: the bf16-wire
+    budget window reads exactly the u16 slice, so mixed programs (u16
+    combine + f32 resharding + s32 control all-reduce) must not bleed
+    across dtypes."""
+    coll = HloCost(_MIXED_DTYPE_HLO, n_dev=2).collectives()
+    per_op = coll["per_op"]
+    cp = per_op["collective-permute"]
+    assert cp["count"] == 3
+    # permutes are point-to-point: wire bytes == result bytes, per dtype
+    assert cp["by_dtype"]["u16"] == (1000 + 500) * 2
+    assert cp["by_dtype"]["f32"] == 250 * 4
+    assert cp["wire_bytes"] == sum(cp["by_dtype"].values())
+    # ring all-reduce at K=2: result · 2(K−1)/K = result bytes
+    ar = per_op["all-reduce"]
+    assert ar["by_dtype"] == {"s32": 100 * 4}
+    # all-gather at K=2: result · (K−1)/K = half the result bytes
+    ag = per_op["all-gather"]
+    assert ag["by_dtype"] == {"f32": 64 * 4 // 2}
+    assert coll["total_bytes"] == (cp["wire_bytes"] + ar["wire_bytes"]
+                                   + ag["wire_bytes"])

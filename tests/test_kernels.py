@@ -189,3 +189,34 @@ def test_flash_fwd_lse_matches_logsumexp():
     logits = jnp.where(mask, logits, -1e30)
     ref = jax.scipy.special.logsumexp(logits, axis=-1)
     np.testing.assert_allclose(lse[..., 0], ref, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Error paths: misaligned shapes must fail loudly, with the numbers
+# ---------------------------------------------------------------------------
+
+
+def test_flash_fwd_rejects_misaligned_seq_with_numbers():
+    from repro.kernels.flash_attention.flash_attention import \
+        flash_attention_fwd_lse
+    q = k = v = jnp.zeros((1, 1, 130, 16), jnp.float32)
+    with pytest.raises(ValueError, match=r"seq_q=130 % block_q=128 = 2"):
+        flash_attention_fwd_lse(q, k, v, interpret=True)
+
+
+def test_flash_bwd_rejects_misaligned_seq_with_numbers():
+    from repro.kernels.flash_attention.flash_bwd import flash_attention_bwd
+    q = k = v = out = do = jnp.zeros((1, 1, 130, 16), jnp.float32)
+    lse = jnp.zeros((1, 1, 130), jnp.float32)
+    with pytest.raises(ValueError, match=r"seq_k=130 % block_k=128 = 2"):
+        flash_attention_bwd(q, k, v, out, lse, do, interpret=True)
+
+
+def test_ssd_scan_rejects_misaligned_length_with_numbers():
+    B, L, HH, P, N = 1, 100, 1, 4, 8
+    x = jnp.zeros((B, L, HH, P), jnp.float32)
+    dt = jnp.zeros((B, L, HH), jnp.float32)
+    A = jnp.zeros((HH,), jnp.float32)
+    Bm = Cm = jnp.zeros((B, L, HH, N), jnp.float32)
+    with pytest.raises(ValueError, match=r"L=100 % chunk=128 = 100"):
+        ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=128, interpret=True)
