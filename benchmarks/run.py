@@ -478,7 +478,7 @@ def bench_superstep(quick: bool):
     C=1 (one jitted dispatch + one host metric fetch per step — the legacy
     loop's behavior) vs C=8 (one per 8 steps).  On dispatch-bound hardware
     the win is the Python/sync overhead times (C−1)/C."""
-    from repro.configs.base import ArchConfig, INPUT_SHAPES, InputShape
+    from repro.configs.base import ArchConfig, InputShape
     from repro.data import LMTaskSource
     from repro.launch.mesh import make_host_mesh
     from repro.launch import steps as S
@@ -490,45 +490,230 @@ def bench_superstep(quick: bool):
                      topology="ring", outer_optimizer="adam",
                      dtype="float32", remat=False, attn_q_chunk=None,
                      meta_tasks=2)
-    INPUT_SHAPES["superstep_bench"] = InputShape("superstep_bench", seq, gb,
-                                                 "train")
-    try:
-        mesh = make_host_mesh(data=min(4, len(jax.devices())))
-        with mesh:
-            bundle = S.build_train(cfg, mesh, "superstep_bench")
-            source = LMTaskSource(vocab_size=cfg.padded_vocab, seq_len=seq,
-                                  K=bundle.K, tasks_per_agent=bundle.T,
-                                  task_batch=bundle.tb, n_domains=8, seed=0)
-            superstep = S.make_superstep(bundle.step_fn)
-            fns = {C: jax.jit(superstep, donate_argnums=(0,))
-                   for C in (1, 8)}
-            n_steps = 32 if quick else 64
+    shape = InputShape("superstep_bench", seq, gb, "train")
+    mesh = make_host_mesh(data=min(4, len(jax.devices())))
+    with mesh:
+        bundle = S.build_train(cfg, mesh, shape)
+        source = LMTaskSource(vocab_size=cfg.padded_vocab, seq_len=seq,
+                              K=bundle.K, tasks_per_agent=bundle.T,
+                              task_batch=bundle.tb, n_domains=8, seed=0)
+        superstep = S.make_superstep(bundle.step_fn)
+        fns = {C: jax.jit(superstep, donate_argnums=(0,))
+               for C in (1, 8)}
+        n_steps = 32 if quick else 64
 
-            def run(C):
-                fn = fns[C]
-                st = bundle.init_state(seed=0)
-                with bundle.make_pipeline(source, depth=2, stack=C) as pipe:
-                    for _ in range(2):           # compile + warm caches
-                        st, m = fn(st, next(pipe))
-                    jax.device_get(m)
-                    t0 = time.perf_counter()
-                    for _ in range(n_steps // C):
-                        st, m = fn(st, next(pipe))
-                        jax.device_get(m)        # per-dispatch host sync
-                    return (n_steps // C) / (time.perf_counter() - t0) * C
+        def run(C):
+            fn = fns[C]
+            st = bundle.init_state(seed=0)
+            with bundle.make_pipeline(source, depth=2, stack=C) as pipe:
+                for _ in range(2):               # compile + warm caches
+                    st, m = fn(st, next(pipe))
+                jax.device_get(m)
+                t0 = time.perf_counter()
+                for _ in range(n_steps // C):
+                    st, m = fn(st, next(pipe))
+                    jax.device_get(m)            # per-dispatch host sync
+                return (n_steps // C) / (time.perf_counter() - t0) * C
 
-            run(1)                               # process burn-in
-            r = {1: [], 8: []}
-            for _ in range(3 if quick else 5):   # alternate reps (2-vCPU
-                for C in (1, 8):                 # clock drift protocol)
-                    r[C].append(run(C))
-            sps = {C: float(np.median(v)) for C, v in r.items()}
-            emit("superstep", 1e6 / sps[8],
-                 f"steps_per_s_c8={sps[8]:.1f};steps_per_s_c1={sps[1]:.1f};"
-                 f"speedup={sps[8] / sps[1]:.2f}x",
-                 detail={"steps_per_s": {str(C): v for C, v in r.items()}})
-    finally:
-        del INPUT_SHAPES["superstep_bench"]
+        run(1)                                   # process burn-in
+        r = {1: [], 8: []}
+        for _ in range(3 if quick else 5):       # alternate reps (2-vCPU
+            for C in (1, 8):                     # clock drift protocol)
+                r[C].append(run(C))
+        sps = {C: float(np.median(v)) for C, v in r.items()}
+        emit("superstep", 1e6 / sps[8],
+             f"steps_per_s_c8={sps[8]:.1f};steps_per_s_c1={sps[1]:.1f};"
+             f"speedup={sps[8] / sps[1]:.2f}x",
+             detail={"steps_per_s": {str(C): v for C, v in r.items()}})
+
+
+def bench_serve(quick: bool):
+    """Serving tier (adaptation-as-a-service): (1) N=8 concurrent user
+    episodes adapted in ONE vmapped dispatch vs 8 sequential serve.py-style
+    adapts (fresh per-request jit — the legacy path); (2) adapted-state
+    cache: recurring-task hit (low-rank delta reconstruction) vs
+    re-adaptation, plus the delta fidelity (|Δ adapted query loss|) and
+    compression ratio; (3) scanned two-phase decode vs the legacy
+    per-token python loop; (4) adapt p50/p99 + adapted-decodes/sec vs
+    concurrent users × recurring fraction.  The two CI-pinned thresholds
+    (batched ≥3× cold-sequential, cache hit ≥5× faster than re-adapt)
+    raise on violation."""
+    from repro.configs.base import ArchConfig
+    from repro.core import maml
+    from repro.launch.serve import make_support_source
+    from repro.models.transformer import build_model
+    from repro.serve import AdaptRequest, ServeEngine
+    from repro.serve.cache import AdaptedStateCache
+
+    cfg = ArchConfig(name="serve-bench", arch_type="dense", num_layers=1,
+                     d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                     d_ff=64, vocab_size=256, dtype="float32", remat=False,
+                     attn_q_chunk=None, inner_lr=1e-2, inner_steps=1)
+    P, G, B, N = 8, 16, 4, 8
+    steps = 2
+    reps = 3 if quick else 8
+    engine = ServeEngine(cfg, prompt_len=P, gen=G, batch=B,
+                         adapt_steps=steps, buckets=(1, 2, 4, 8))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0), jnp.float32)
+    engine.load_params(params)
+    source = make_support_source(cfg, P + G, B)
+    ep = source.eval_sample(N, seed=3, split="full")
+    sup = [{k: v[i] for k, v in ep.support.items()} for i in range(N)]
+    qry = [{k: v[i] for k, v in ep.query.items()} for i in range(N)]
+    # forced-distinct keys: eval_sample may repeat domains, and a shared
+    # key would make two users alias one cache entry
+    keyed = [AdaptRequest(sup[i], engine.signature(source, 1000 + i))
+             for i in range(N)]
+    keyless = [AdaptRequest(s) for s in sup]
+
+    # --- (1) batched vmapped adapt vs sequential ------------------------
+    engine.adapt(keyless)                        # compile bucket-8
+    batched_s = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        engine.adapt(keyless)
+        batched_s.append(time.perf_counter() - t0)
+    batched = float(np.median(batched_s))
+
+    def adapt_one_fn():
+        return jax.jit(lambda p, b: maml.inner_adapt(
+            model.loss_fn, p, b, alpha=cfg.inner_lr, steps=steps,
+            first_order=True))
+
+    warm_fn = adapt_one_fn()
+    dev_sup = [{k: jnp.asarray(v) for k, v in s.items()} for s in sup]
+    jax.block_until_ready(warm_fn(params, dev_sup[0]))
+    t0 = time.perf_counter()
+    for s in dev_sup:
+        jax.block_until_ready(warm_fn(params, s))
+    warm_seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for s in dev_sup:                            # serve.py-style: a fresh
+        f = adapt_one_fn()                       # jit per request, so every
+        jax.block_until_ready(f(params, s))      # request retraces
+    cold_seq = time.perf_counter() - t0
+    x_cold, x_warm = cold_seq / batched, warm_seq / batched
+    emit("serve_adapt_batched", batched * 1e6 / N,
+         f"n={N};batched_s={batched:.4f};cold_seq_s={cold_seq:.2f};"
+         f"warm_seq_s={warm_seq:.4f};throughput_x_cold={x_cold:.1f};"
+         f"throughput_x_warm={x_warm:.2f};meets_3x={x_cold >= 3.0}",
+         detail={"batched_s": batched_s, "cold_seq_s": cold_seq,
+                 "warm_seq_s": warm_seq})
+
+    # --- (2) cache hit vs re-adaptation + delta fidelity ----------------
+    full_adapted, _ = engine.adapt(keyed)        # misses: fill the cache
+    engine.adapt(keyed)                          # compile the hit path
+    miss_s, hit_s = [], []
+    for _ in range(reps):
+        engine.cache._store.clear()              # force misses (warm fns)
+        t0 = time.perf_counter()
+        engine.adapt(keyed)
+        miss_s.append((time.perf_counter() - t0) / N)
+        t0 = time.perf_counter()
+        rec_adapted, _ = engine.adapt(keyed)
+        hit_s.append((time.perf_counter() - t0) / N)
+    miss_us, hit_us = np.median(miss_s) * 1e6, np.median(hit_s) * 1e6
+    speedup = miss_us / hit_us
+    l_full = engine.adapted_loss(full_adapted, qry)
+    l_rec = engine.adapted_loss(rec_adapted, qry)
+    drift = float(np.max(np.abs(l_full - l_rec)))
+    stats = engine.cache.stats()
+    emit("serve_cache_hit", hit_us,
+         f"readapt_us={miss_us:.0f};speedup={speedup:.1f}x;"
+         f"meets_5x={speedup >= 5.0};loss_drift={drift:.5f};"
+         f"drift_ok={drift <= 1e-2};compression={stats['compression']:.2f}x",
+         detail={"miss_s": miss_s, "hit_s": hit_s, "cache": stats,
+                 "loss_full": l_full.tolist(), "loss_rec": l_rec.tolist()})
+
+    # --- (3) scanned decode vs per-token python loop --------------------
+    prompt = np.asarray(ep.query["tokens"][0])[:, :P]
+    a0 = full_adapted[0]
+    engine.decode(a0, prompt)                    # compile both scans
+    dm = None
+    for _ in range(reps):
+        _, dm = engine.decode(a0, prompt)
+    step = jax.jit(engine.bundle.step_fn)        # legacy loop baseline
+
+    def py_loop():
+        cache = model.init_cache(B, P + G, jnp.float32, params=a0)
+        tok = jnp.asarray(prompt[:, :1])
+        for t in range(P + G - 1):
+            logits, cache = step(a0, cache, tok, jnp.full((B,), t, jnp.int32))
+            if t + 1 < P:
+                tok = jnp.asarray(prompt[:, t + 1: t + 2])
+            else:
+                tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(
+                    jnp.int32)
+                np.asarray(tok)                  # the per-token host sync
+        return tok
+
+    loop_us = _timed(py_loop, reps=reps)
+    scan_us = (dm["prefill_s"] + dm["decode_s"]) * 1e6
+    emit("serve_decode", scan_us,
+         f"prompt_tok_s={dm['prompt_tok_s']:.0f};"
+         f"decode_tok_s={dm['decode_tok_s']:.0f};"
+         f"pyloop_us={loop_us:.0f};speedup_vs_pyloop={loop_us / scan_us:.1f}x",
+         detail={"scan": dm, "pyloop_us": loop_us})
+
+    # --- (4) adapt latency + adapted-decodes/sec vs users × recurring ---
+    sweep: dict[str, dict] = {}
+    for users in (1, 2, 4, 8):
+        u_sup = sup[:users]
+        u_keyed = keyed[:users]
+        engine.adapt([AdaptRequest(s) for s in u_sup])   # compile bucket
+        row = {}
+        for frac_name, frac in [("cold", 0.0), ("mixed", 0.5),
+                                ("recurring", 1.0)]:
+            n_rec = int(users * frac)
+            # recurring users resolve from the cache; the rest opt out of
+            # caching so every rep re-measures a genuine miss
+            requests = u_keyed[:n_rec] + [AdaptRequest(s)
+                                          for s in u_sup[n_rec:]]
+            engine.cache = AdaptedStateCache(capacity=64)
+            if n_rec:
+                engine.adapt(u_keyed[:n_rec])    # residents + compile
+            lat, thru = [], []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                adapted, _ = engine.adapt(requests)
+                adapt_s = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                for a in adapted:
+                    engine.decode(a, prompt)
+                dec_s = time.perf_counter() - t0
+                lat.append(adapt_s / users)
+                thru.append(users * B * G / (adapt_s + dec_s))
+            row[frac_name] = {
+                "adapt_p50_us": float(np.percentile(lat, 50) * 1e6),
+                "adapt_p99_us": float(np.percentile(lat, 99) * 1e6),
+                "adapted_decodes_per_s": float(np.median(thru)),
+            }
+        sweep[str(users)] = row
+        emit(f"serve_users_{users}", row["cold"]["adapt_p50_us"],
+             f"cold_p50_us={row['cold']['adapt_p50_us']:.0f};"
+             f"cold_p99_us={row['cold']['adapt_p99_us']:.0f};"
+             f"recurring_p50_us={row['recurring']['adapt_p50_us']:.0f};"
+             f"decodes_per_s_cold={row['cold']['adapted_decodes_per_s']:.1f};"
+             f"decodes_per_s_recurring="
+             f"{row['recurring']['adapted_decodes_per_s']:.1f}")
+    emit("serve_summary", batched * 1e6 / N,
+         f"batched_x_cold={x_cold:.1f};cache_hit_x={speedup:.1f};"
+         f"drift={drift:.5f};compression={stats['compression']:.2f}x",
+         detail={"sweep": sweep})
+
+    if x_cold < 3.0:
+        raise RuntimeError(
+            f"serve acceptance: batched adapt {x_cold:.2f}x vs "
+            f"cold-sequential, pinned >= 3x")
+    if speedup < 5.0:
+        raise RuntimeError(
+            f"serve acceptance: cache hit {speedup:.2f}x vs re-adapt, "
+            f"pinned >= 5x")
+    if drift > 1e-2:
+        raise RuntimeError(
+            f"serve acceptance: delta-reconstruction loss drift "
+            f"{drift:.4f}, pinned <= 1e-2")
 
 
 def bench_kernels(quick: bool):
@@ -598,7 +783,7 @@ def bench_pipeline(quick: bool):
     background prefetcher, for both the loop and vectorized sources —
     overlap_recovered = fraction of the sync step time the pipeline wins
     back by sampling episode i+1 while the device runs step i."""
-    from repro.configs.base import ArchConfig, INPUT_SHAPES, InputShape
+    from repro.configs.base import ArchConfig, InputShape
     from repro.data import LMTaskSampler, LMTaskSource
     from repro.launch.mesh import make_host_mesh
     from repro.launch import steps as S
@@ -615,107 +800,103 @@ def bench_pipeline(quick: bool):
                      topology="ring", outer_optimizer="adam",
                      dtype="float32", remat=False, attn_q_chunk=None,
                      meta_tasks=8)
-    INPUT_SHAPES["lm_pipe_bench"] = InputShape("lm_pipe_bench", seq, gb,
-                                               "train")
-    try:
-        mesh = make_host_mesh(data=min(4, len(jax.devices())))
-        with mesh:
-            bundle = S.build_train(cfg, mesh, "lm_pipe_bench")
-            K, T, tb = bundle.K, bundle.T, bundle.tb
-            dom_kw = dict(n_domains=8 * max(1, K), branching=256,
-                          n_buckets=4096, seed=0)
-            vec = LMTaskSource(vocab_size=cfg.padded_vocab, seq_len=seq,
-                               K=K, tasks_per_agent=T, task_batch=tb,
-                               **dom_kw)
-            loop = _LoopLMSource(
-                LMTaskSampler(cfg.padded_vocab, seq, **dom_kw), K, T, tb)
+    shape = InputShape("lm_pipe_bench", seq, gb, "train")
+    mesh = make_host_mesh(data=min(4, len(jax.devices())))
+    with mesh:
+        bundle = S.build_train(cfg, mesh, shape)
+        K, T, tb = bundle.K, bundle.T, bundle.tb
+        dom_kw = dict(n_domains=8 * max(1, K), branching=256,
+                      n_buckets=4096, seed=0)
+        vec = LMTaskSource(vocab_size=cfg.padded_vocab, seq_len=seq,
+                           K=K, tasks_per_agent=T, task_batch=tb,
+                           **dom_kw)
+        loop = _LoopLMSource(
+            LMTaskSampler(cfg.padded_vocab, seq, **dom_kw), K, T, tb)
 
-            # --- (1) episode generation: vectorized vs python loop -------
-            reps = 3 if quick else 10
-            vec.sample(0); loop.sample(0)            # warm table caches
-            t0 = time.perf_counter()
-            for i in range(reps):
-                vec.sample(i)
-            vec_s = (time.perf_counter() - t0) / reps
-            t0 = time.perf_counter()
-            for i in range(reps):
-                loop.sample(i)
-            loop_s = (time.perf_counter() - t0) / reps
-            emit("pipeline_lm_vectorized", vec_s * 1e6,
-                 f"speedup_vs_loop={loop_s / vec_s:.1f}x;"
-                 f"episodes_per_s={1.0 / vec_s:.1f};"
-                 f"rows={K * T * 2 * tb};seq={seq}")
+        # --- (1) episode generation: vectorized vs python loop -------
+        reps = 3 if quick else 10
+        vec.sample(0); loop.sample(0)            # warm table caches
+        t0 = time.perf_counter()
+        for i in range(reps):
+            vec.sample(i)
+        vec_s = (time.perf_counter() - t0) / reps
+        t0 = time.perf_counter()
+        for i in range(reps):
+            loop.sample(i)
+        loop_s = (time.perf_counter() - t0) / reps
+        emit("pipeline_lm_vectorized", vec_s * 1e6,
+             f"speedup_vs_loop={loop_s / vec_s:.1f}x;"
+             f"episodes_per_s={1.0 / vec_s:.1f};"
+             f"rows={K * T * 2 * tb};seq={seq}")
 
-            # --- (2) sync vs prefetched trainer input --------------------
-            # Two readings per (source, depth):
-            #   wall  — end-to-end step wall time (the loop reads the loss
-            #           every step, as the production trainer does for
-            #           logging; without that read jax's async dispatch
-            #           hides sampling in BOTH modes);
-            #   stall — time the step loop spends blocked in next(pipe),
-            #           i.e. the input path's share of the critical path.
-            # The stall is the mechanism metric (prefetch drives it to ~0
-            # regardless of machine noise); the wall delta additionally
-            # depends on spare host cores, so alternating repetitions are
-            # taken and the MEDIAN reported (shared-vCPU clocks drift).
-            step = jax.jit(bundle.step_fn, donate_argnums=(0,))
-            n_steps = 5 if quick else 8
-            n_reps = 3 if quick else 5
+        # --- (2) sync vs prefetched trainer input --------------------
+        # Two readings per (source, depth):
+        #   wall  — end-to-end step wall time (the loop reads the loss
+        #           every step, as the production trainer does for
+        #           logging; without that read jax's async dispatch
+        #           hides sampling in BOTH modes);
+        #   stall — time the step loop spends blocked in next(pipe),
+        #           i.e. the input path's share of the critical path.
+        # The stall is the mechanism metric (prefetch drives it to ~0
+        # regardless of machine noise); the wall delta additionally
+        # depends on spare host cores, so alternating repetitions are
+        # taken and the MEDIAN reported (shared-vCPU clocks drift).
+        step = jax.jit(bundle.step_fn, donate_argnums=(0,))
+        n_steps = 5 if quick else 8
+        n_reps = 3 if quick else 5
 
-            def run(source, depth):
-                st = bundle.init_state(seed=0)
-                with bundle.make_pipeline(source, depth=depth) as pipe:
-                    for _ in range(3):               # compile + warm caches
-                        st, m = step(st, next(pipe))
-                    jax.block_until_ready(m["loss"])
-                    stall = 0.0
-                    t0 = time.perf_counter()
-                    for _ in range(n_steps):
-                        t1 = time.perf_counter()
-                        batch = next(pipe)
-                        stall += time.perf_counter() - t1
-                        st, m = step(st, batch)
-                        float(m["loss"])
-                    wall = time.perf_counter() - t0
-                    return wall / n_steps, stall / n_steps
+        def run(source, depth):
+            st = bundle.init_state(seed=0)
+            with bundle.make_pipeline(source, depth=depth) as pipe:
+                for _ in range(3):               # compile + warm caches
+                    st, m = step(st, next(pipe))
+                jax.block_until_ready(m["loss"])
+                stall = 0.0
+                t0 = time.perf_counter()
+                for _ in range(n_steps):
+                    t1 = time.perf_counter()
+                    batch = next(pipe)
+                    stall += time.perf_counter() - t1
+                    st, m = step(st, batch)
+                    float(m["loss"])
+                wall = time.perf_counter() - t0
+                return wall / n_steps, stall / n_steps
 
-            run(vec, 0)                              # burn-in (first jit run
-            # of a fresh process is systematically slower on 2-core CI)
+        run(vec, 0)                              # burn-in (first jit run
+        # of a fresh process is systematically slower on 2-core CI)
 
-            out = {"sample_us": {"vec": vec_s * 1e6, "loop": loop_s * 1e6},
-                   "loop": {"sync": [], "prefetch": []},
-                   "vec": {"sync": [], "prefetch": []}}
-            for _ in range(n_reps):
-                for label, source in [("loop", loop), ("vec", vec)]:
-                    out[label]["sync"].append(run(source, 0))
-                    out[label]["prefetch"].append(run(source, 2))
-            med = lambda xs, i: float(np.median([x[i] for x in xs]))
-            for label in ["loop", "vec"]:
-                raw = out[label]
-                out[label] = {
-                    "sync_us": med(raw["sync"], 0) * 1e6,
-                    "prefetch_us": med(raw["prefetch"], 0) * 1e6,
-                    "stall_sync_us": med(raw["sync"], 1) * 1e6,
-                    "stall_prefetch_us": med(raw["prefetch"], 1) * 1e6,
-                    "raw": raw,
-                }
-                o = out[label]
-                emit(f"pipeline_overlap_lm_{label}", o["prefetch_us"],
-                     f"sync_us={o['sync_us']:.0f};"
-                     f"overlap_recovered="
-                     f"{(o['sync_us'] - o['prefetch_us']) / o['sync_us']:.3f};"
-                     f"input_stall_sync_us={o['stall_sync_us']:.0f};"
-                     f"input_stall_prefetch_us={o['stall_prefetch_us']:.0f}")
-            emit("pipeline_summary", 0.0,
-                 "prefetch_faster_than_sync=%s;input_stall_hidden=%.3f;"
-                 "vectorized_speedup=%.1fx"
-                 % (out["loop"]["prefetch_us"] < out["loop"]["sync_us"],
-                    1.0 - out["loop"]["stall_prefetch_us"]
-                    / max(out["loop"]["stall_sync_us"], 1e-9),
-                    loop_s / vec_s),
-                 detail=out)
-    finally:
-        del INPUT_SHAPES["lm_pipe_bench"]
+        out = {"sample_us": {"vec": vec_s * 1e6, "loop": loop_s * 1e6},
+               "loop": {"sync": [], "prefetch": []},
+               "vec": {"sync": [], "prefetch": []}}
+        for _ in range(n_reps):
+            for label, source in [("loop", loop), ("vec", vec)]:
+                out[label]["sync"].append(run(source, 0))
+                out[label]["prefetch"].append(run(source, 2))
+        med = lambda xs, i: float(np.median([x[i] for x in xs]))
+        for label in ["loop", "vec"]:
+            raw = out[label]
+            out[label] = {
+                "sync_us": med(raw["sync"], 0) * 1e6,
+                "prefetch_us": med(raw["prefetch"], 0) * 1e6,
+                "stall_sync_us": med(raw["sync"], 1) * 1e6,
+                "stall_prefetch_us": med(raw["prefetch"], 1) * 1e6,
+                "raw": raw,
+            }
+            o = out[label]
+            emit(f"pipeline_overlap_lm_{label}", o["prefetch_us"],
+                 f"sync_us={o['sync_us']:.0f};"
+                 f"overlap_recovered="
+                 f"{(o['sync_us'] - o['prefetch_us']) / o['sync_us']:.3f};"
+                 f"input_stall_sync_us={o['stall_sync_us']:.0f};"
+                 f"input_stall_prefetch_us={o['stall_prefetch_us']:.0f}")
+        emit("pipeline_summary", 0.0,
+             "prefetch_faster_than_sync=%s;input_stall_hidden=%.3f;"
+             "vectorized_speedup=%.1fx"
+             % (out["loop"]["prefetch_us"] < out["loop"]["sync_us"],
+                1.0 - out["loop"]["stall_prefetch_us"]
+                / max(out["loop"]["stall_sync_us"], 1e-9),
+                loop_s / vec_s),
+             detail=out)
 
 
 def bench_generalization_gap(quick: bool):
@@ -996,6 +1177,7 @@ BENCHES = {
     "combine_dynamic": bench_combine_dynamic,
     "outer_update": bench_outer_update,
     "superstep": bench_superstep,
+    "serve": bench_serve,
     "kernels": bench_kernels,
     "generalization": bench_generalization_gap,
     "modes": bench_meta_modes,

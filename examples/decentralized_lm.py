@@ -25,7 +25,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 from repro.checkpoint import save_checkpoint
-from repro.configs.base import ArchConfig, INPUT_SHAPES, InputShape
+from repro.configs.base import ArchConfig, InputShape
 from repro.core import topology, update
 from repro.data import LMTaskSource
 from repro.launch.mesh import make_host_mesh
@@ -73,11 +73,10 @@ def main():
     seq = args.seq or (32 if args.tiny else 256)
     gb = args.global_batch or (8 if args.tiny else 32)
     shape = InputShape("lm_example", seq, gb, "train")
-    INPUT_SHAPES[shape.name] = shape
 
     mesh = make_host_mesh(data=min(4, len(jax.devices())))
     with mesh:
-        bundle = S.build_train(cfg, mesh, shape.name,
+        bundle = S.build_train(cfg, mesh, shape,
                                strategy=args.strategy,
                                schedule=args.schedule,
                                link_failure_p=args.link_failure_p)

@@ -32,6 +32,11 @@ def main() -> None:
                     help="require a kind=analysis record (the trainer's "
                          "post-run retrace-guard lint): no findings, and "
                          "jit compile count within the expected budget")
+    ap.add_argument("--serve", action="store_true",
+                    help="validate a serving run log instead of a trainer "
+                         "log: requires a kind=serve record with cache "
+                         "hit/miss/eviction counters, adapt latency "
+                         "percentiles, and per-phase decode tok/s")
     args = ap.parse_args()
     path = args.path
 
@@ -39,6 +44,35 @@ def main() -> None:
         records = [json.loads(line) for line in f if line.strip()]
     assert records, f"{path} is empty"
     kinds = {r.get("kind") for r in records}
+
+    if args.serve:
+        serves = [r for r in records if r.get("kind") == "serve"]
+        assert serves, f"no serve records in {path} (kinds: {kinds})"
+        for rec in serves:
+            cache = rec.get("cache", {})
+            missing = {"hits", "misses", "evictions", "residents",
+                       "compression"} - set(cache)
+            assert not missing, \
+                f"serve record cache counters missing {missing}: " \
+                f"{sorted(cache)}"
+            adapt = rec.get("adapt", {})
+            assert {"p50_us", "p99_us"} <= set(adapt), \
+                f"serve record missing adapt latency percentiles: " \
+                f"{sorted(adapt)}"
+            decode = rec.get("decode", {})
+            assert decode.get("prompt_tok_s") and decode.get("decode_tok_s"), \
+                f"serve record missing per-phase decode tok/s: " \
+                f"{sorted(decode)}"
+        s = serves[-1]
+        assert s["cache"]["hits"] >= 1, \
+            "serve run never hit the adapted-state cache — the recurring " \
+            "fast path was not exercised (run with --rounds >= 2)"
+        print(f"ok: {path} has {len(serves)} serve record(s) "
+              f"(cache {s['cache']['hits']} hits / {s['cache']['misses']} "
+              f"misses, adapt p50 {s['adapt']['p50_us']:.0f}us, "
+              f"compression {s['cache']['compression']:.2f}x)")
+        return
+
     assert "train" in kinds, f"no train records in {path} (kinds: {kinds})"
 
     configs = [r for r in records if r.get("kind") == "config"]

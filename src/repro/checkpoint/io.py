@@ -62,6 +62,43 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
+def _resolve_ckpt(ckpt_dir: str, step: int | None) -> str:
+    """Path of the checkpoint to restore, with failure modes spelled out:
+    a missing directory, a directory with no checkpoints, and an
+    explicitly requested step that was never written each raise their own
+    message (serve/resume callers surface these verbatim)."""
+    if step is None:
+        if not os.path.isdir(ckpt_dir):
+            raise FileNotFoundError(
+                f"checkpoint dir {ckpt_dir!r} does not exist")
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(
+                f"checkpoint dir {ckpt_dir!r} exists but holds no "
+                f"ckpt_*.npz files (contents: "
+                f"{sorted(os.listdir(ckpt_dir))[:8]})")
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    if not os.path.exists(path):
+        have = sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)
+                      if (m := re.match(r"ckpt_(\d+)\.npz$", f))) \
+            if os.path.isdir(ckpt_dir) else []
+        raise FileNotFoundError(
+            f"no checkpoint for step {step} in {ckpt_dir!r} "
+            f"(available steps: {have})")
+    return path
+
+
+def _lookup(data, key: str, path: str) -> np.ndarray:
+    if key not in data:
+        have = sorted(data.files)
+        raise KeyError(
+            f"{path} has no leaf {key!r} — the checkpoint does not match "
+            f"the requested spec (was it written by a different arch or "
+            f"TrainState layout?).  Archive holds {len(have)} leaves, "
+            f"e.g. {have[:4]}")
+    return _decode_raw(data[key])
+
+
 def restore_centroid(ckpt_dir: str, like_params: PyTree,
                      step: int | None = None) -> PyTree:
     """Restore the agent-**centroid** launch model from a TrainState
@@ -70,11 +107,7 @@ def restore_centroid(ckpt_dir: str, like_params: PyTree,
     (arrays or ShapeDtypeStructs).  This is the serve path's entry point —
     a checkpoint holds K per-agent models, serving wants the consensus one.
     """
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    path = _resolve_ckpt(ckpt_dir, step)
     data = np.load(path)
     # the params field's key-path prefix inside TrainState, derived from a
     # probe so it tracks jax's key-path spelling
@@ -87,7 +120,7 @@ def restore_centroid(ckpt_dir: str, like_params: PyTree,
     out = []
     for path_keys, leaf in paths:
         key = _SEP.join([prefix] + [_fmt(p) for p in path_keys])
-        arr = _decode_raw(data[key])
+        arr = _lookup(data, key, path)
         if arr.shape[1:] != tuple(leaf.shape):
             raise ValueError(
                 f"agent-stacked shape mismatch for {key}: checkpoint "
@@ -101,11 +134,7 @@ def restore_checkpoint(ckpt_dir: str, like: PyTree, step: int | None = None,
                        shardings: PyTree | None = None) -> PyTree:
     """Restore into the structure of ``like`` (arrays or SDS).  If a
     shardings tree is given, leaves are device_put with it."""
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    path = _resolve_ckpt(ckpt_dir, step)
     data = np.load(path)
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
@@ -113,7 +142,7 @@ def restore_checkpoint(ckpt_dir: str, like: PyTree, step: int | None = None,
     out = []
     for (path_keys, leaf), shard in zip(paths, shard_leaves):
         key = _SEP.join(_fmt(p) for p in path_keys)
-        arr = _decode_raw(data[key])
+        arr = _lookup(data, key, path)
         if arr.shape != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {leaf.shape}")

@@ -1,3 +1,7 @@
-from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES, get_config, list_archs
+from repro.configs.base import (ArchConfig, InputShape, INPUT_SHAPES,
+                                get_config, input_shape_scope, list_archs,
+                                register_input_shape, resolve_input_shape)
 
-__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "get_config", "list_archs"]
+__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "get_config",
+           "input_shape_scope", "list_archs", "register_input_shape",
+           "resolve_input_shape"]

@@ -7,9 +7,10 @@ variant (≤2 layers, d_model ≤ 512, ≤4 experts) of the same family.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import importlib
-from typing import Any
+from typing import Any, Iterator
 
 VOCAB_PAD = 256
 
@@ -32,6 +33,78 @@ INPUT_SHAPES: dict[str, InputShape] = {
     "decode_32k":  InputShape("decode_32k", 32_768, 128, "decode"),
     "long_500k":   InputShape("long_500k", 524_288, 1, "decode"),
 }
+
+# Names of the shapes that ship with the repo: run-local registrations
+# (register_input_shape / input_shape_scope) may never displace these.
+_BUILTIN_SHAPES = frozenset(INPUT_SHAPES)
+
+
+def register_input_shape(shape: InputShape, *,
+                         override: bool = False) -> InputShape:
+    """Register a run-local :class:`InputShape` under ``shape.name``.
+
+    The registry is process-global (builders resolve shapes by name), so
+    uncoordinated writes — the old ``INPUT_SHAPES[name] = ...`` idiom —
+    leak state between in-process callers: a test or serving tier that
+    registered ``serve_adapt`` once would silently serve a stale geometry
+    to the next caller.  This helper makes collisions loud: re-registering
+    an existing name raises unless ``override=True`` (same-value
+    re-registration is an idempotent no-op), and the built-in shapes can
+    never be displaced.  Prefer :func:`input_shape_scope` for callers with
+    a bounded lifetime (tests, benchmarks, one serve session).
+    """
+    existing = INPUT_SHAPES.get(shape.name)
+    if existing == shape:
+        return shape
+    if existing is not None:
+        if shape.name in _BUILTIN_SHAPES:
+            raise ValueError(
+                f"input shape {shape.name!r} is built in ({existing}) and "
+                f"cannot be overridden; register under a different name")
+        if not override:
+            raise ValueError(
+                f"input shape {shape.name!r} is already registered as "
+                f"{existing}; pass override=True to replace it or use "
+                f"input_shape_scope for a scoped registration")
+    INPUT_SHAPES[shape.name] = shape
+    return shape
+
+
+@contextlib.contextmanager
+def input_shape_scope(shape: InputShape) -> Iterator[InputShape]:
+    """Scoped registration: ``with input_shape_scope(shape):`` registers the
+    shape on entry and restores the previous registry state on exit (the
+    prior entry comes back if one existed, otherwise the name is removed) —
+    repeated in-process calls (tests, benchmarks, the serving tier) cannot
+    leak geometry into each other."""
+    if shape.name in _BUILTIN_SHAPES and INPUT_SHAPES[shape.name] != shape:
+        raise ValueError(
+            f"input shape {shape.name!r} is built in and cannot be "
+            f"shadowed; pick a different name")
+    prev = INPUT_SHAPES.get(shape.name)
+    INPUT_SHAPES[shape.name] = shape
+    try:
+        yield shape
+    finally:
+        if prev is None:
+            INPUT_SHAPES.pop(shape.name, None)
+        else:
+            INPUT_SHAPES[shape.name] = prev
+
+
+def resolve_input_shape(shape: InputShape | str) -> InputShape:
+    """Resolve a shape name through the registry, or pass an
+    :class:`InputShape` through unchanged — builders accept either, so
+    one-shot geometries need not touch the global registry at all."""
+    if isinstance(shape, InputShape):
+        return shape
+    try:
+        return INPUT_SHAPES[shape]
+    except KeyError:
+        raise KeyError(
+            f"unknown input shape {shape!r}: registered shapes are "
+            f"{sorted(INPUT_SHAPES)} (register_input_shape / "
+            f"input_shape_scope add run-local ones)") from None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,35 +1,35 @@
-"""Batched serving driver: adapt-then-serve on the shared adaptation engine.
+"""Serving CLI: adaptation-as-a-service over a launch-model checkpoint.
 
 Dif-MAML's product is a *launch model*: at serving time an agent adapts it
-to the live task with a few gradient steps, then serves batched decode
-requests from the adapted model.  Adaptation here is
-``maml.inner_adapt`` — the exact code path the meta step differentiates
-through (freeze masks, remat, multi-step scan all track automatically) —
-applied to the **centroid** of a training checkpoint (restore → mean over
-the agent axis) on an ``eval_sample`` support episode from the unified
-``TaskSource`` surface; decode then runs through the ``ServeBundle``.
+to each live task with a few gradient steps, then serves batched decode
+requests from the adapted model.  The machinery lives in
+``repro.serve.ServeEngine`` — batched (vmapped, bucket-compiled)
+``inner_adapt`` over concurrent user episodes, an LRU adapted-state cache
+keyed by task signature (recurring users skip re-adaptation via low-rank
+delta reconstruction), and a dispatch-free two-scan decode.  This module
+is the thin CLI: restore the checkpoint centroid (or a fresh init), drive
+``--users`` concurrent requests for ``--rounds`` rounds (round 2+ re-draws
+the same tasks — the recurring-user fast path), decode from the first
+adapted model, and optionally write the engine's ``kind=serve`` record to
+a JSONL run log.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \\
       --batch 4 --prompt-len 8 --gen 16 --adapt-steps 2 --seed 0 \\
-      [--ckpt-dir ckpts/seed0]
+      [--users 4 --rounds 2] [--ckpt-dir ckpts/seed0] [--run-log serve.jsonl]
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import restore_centroid
-from repro.configs import INPUT_SHAPES, get_config
-from repro.configs.base import InputShape
-from repro.core import maml
+from repro.configs import get_config
 from repro.data.lm_tasks import LMTaskSource
-from repro.launch.mesh import make_host_mesh
 from repro.launch import steps as S
-from repro.models.transformer import build_model
+from repro.serve import ServeEngine
 
 
 def make_support_source(cfg, seq_len: int, task_batch: int,
@@ -54,7 +54,7 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0,
                     help="drives launch-model init (no checkpoint), the "
-                         "support episode draw, and sampling — serve-time "
+                         "support episode draws, and sampling — serve-time "
                          "sampling is reproducible per seed, not fixed")
     ap.add_argument("--ckpt-dir", default=None,
                     help="training checkpoint dir (e.g. ckpts/seed0): the "
@@ -62,82 +62,79 @@ def main() -> None:
                          "omit to serve from a fresh init")
     ap.add_argument("--split", default=None,
                     choices=["recurring", "unseen", "full"],
-                    help="which eval split the live task is drawn from "
+                    help="which eval split the live tasks are drawn from "
                          "(default: unseen — the launch scenario)")
+    ap.add_argument("--users", type=int, default=4,
+                    help="concurrent adaptation requests per round (one "
+                         "vmapped inner_adapt dispatch, bucket-padded)")
+    ap.add_argument("--rounds", type=int, default=2,
+                    help="request rounds; rounds after the first re-draw "
+                         "the same tasks, exercising the adapted-state "
+                         "cache's recurring-user fast path")
+    ap.add_argument("--cache-capacity", type=int, default=64)
+    ap.add_argument("--rank", type=int, default=8,
+                    help="low-rank delta factorization rank (per matrix "
+                         "leaf, fidelity-gated — see serve/lowrank.py)")
+    ap.add_argument("--run-log", default=None,
+                    help="JSONL path for the engine's kind=serve record "
+                         "(cache counters, adapt p50/p99, per-phase tok/s)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    model = build_model(cfg)
-    mesh = make_host_mesh()
     dt = S.DTYPES[cfg.dtype] if not args.reduced else jnp.float32
 
-    B = args.batch
-    total = args.prompt_len + args.gen
-    INPUT_SHAPES["serve_adapt"] = InputShape("serve_adapt", total, B, "decode")
+    B, total = args.batch, args.prompt_len + args.gen
+    engine = ServeEngine(
+        cfg, prompt_len=args.prompt_len, gen=args.gen, batch=B,
+        adapt_steps=args.adapt_steps, temperature=args.temperature,
+        cache_capacity=args.cache_capacity, rank=args.rank, dtype=dt)
 
-    with mesh:
-        bundle = S.build_serve(cfg, mesh, "serve_adapt")
-        if args.ckpt_dir:
-            params = restore_centroid(args.ckpt_dir, bundle.params_specs)
-            print(f"[serve] launch model = checkpoint centroid "
-                  f"({args.ckpt_dir})")
-        else:
-            params = model.init(jax.random.key(args.seed), dt)
-            print(f"[serve] launch model = fresh init (seed {args.seed})")
+    if args.ckpt_dir:
+        params = restore_centroid(args.ckpt_dir, engine.bundle.params_specs)
+        print(f"[serve] launch model = checkpoint centroid ({args.ckpt_dir})")
+    else:
+        params = engine.model.init(jax.random.key(args.seed), dt)
+        print(f"[serve] launch model = fresh init (seed {args.seed})")
+    engine.load_params(params)
 
-        # -- adapt: one eval episode from the TaskSource surface ------------
-        source = make_support_source(cfg, total, B, seed=args.seed)
-        ep = source.eval_sample(1, split=args.split)
-        take0 = lambda tree: {k: jnp.asarray(v[0]) for k, v in tree.items()}
-        support = take0(ep.support)
-        support.update(S.modality_extras(cfg, (B,), dt))
+    # -- adapt: --users concurrent episodes per round; same tasks each
+    # round (same eval seed → same domain draw), so rounds 2+ are the
+    # recurring-user path and resolve from the adapted-state cache
+    source = make_support_source(cfg, total, B, seed=args.seed)
+    ep = None
+    for rnd in range(args.rounds):
+        ep = source.eval_sample(args.users, seed=args.seed, split=args.split)
+        requests = engine.requests_from_episode(source, ep)
+        adapted, m = engine.adapt(requests)
+        doms = np.asarray(ep.domains).tolist()
+        print(f"[serve] round {rnd}: adapted {m['n']} users "
+              f"(domains {doms}) in {m['seconds']:.3f}s — "
+              f"{m['hits']} cache hits, {m['misses']} misses "
+              f"(buckets {m['buckets']})")
 
-        adapt_fn = jax.jit(lambda p, batch: maml.inner_adapt(
-            model.loss_fn, p, batch, alpha=cfg.inner_lr,
-            steps=args.adapt_steps, first_order=True))
-        t0 = time.time()
-        params = jax.block_until_ready(adapt_fn(params, support))
-        print(f"[serve] adapted launch model to domain "
-              f"{int(np.asarray(ep.domains)[0])} in {time.time()-t0:.2f}s "
-              f"({args.adapt_steps} steps via maml.inner_adapt)")
+    # -- decode from the first user's adapted model: prompts are fresh
+    # sequences of the domain it just adapted to (the episode's query half)
+    prompt = np.asarray(ep.query["tokens"][0])[:, : args.prompt_len]
+    tokens, dm = engine.decode(adapted[0], prompt, seed=args.seed)
+    print(f"[serve] prompt: {B} seqs × {args.prompt_len} tok in "
+          f"{dm['prefill_s']:.3f}s ({dm['prompt_tok_s']:.1f} tok/s prefill)")
+    print(f"[serve] decode: {B} seqs × {args.gen} tok in "
+          f"{dm['decode_s']:.3f}s ({dm['decode_tok_s']:.1f} tok/s)")
+    print("[serve] sample:", tokens[0].tolist())
 
-        # -- serve: batched decode through the ServeBundle ------------------
-        enc = None
-        if cfg.arch_type == "audio":
-            enc = model.encode(params, support["encoder_frames"])
-        elif cfg.arch_type == "vlm":
-            enc = support["image_patches"] @ params["vision_proj"]
-        cache = model.init_cache(B, total, dt, params=params, enc=enc)
-        step = jax.jit(bundle.step_fn)
+    stats = engine.cache.stats()
+    print(f"[serve] cache: {stats['hits']} hits / {stats['misses']} misses "
+          f"/ {stats['evictions']} evictions, {stats['residents']} "
+          f"residents, {stats['compression']:.2f}x delta compression")
 
-        # decode prompts come from the episode's *query* half: fresh
-        # sequences of the same domain the model just adapted to
-        prompt = np.asarray(ep.query["tokens"][0])[:, : args.prompt_len]
-        out_tokens = [prompt[:, i] for i in range(args.prompt_len)]
-        tok = jnp.asarray(prompt[:, :1])
-        sample_key = jax.random.key(args.seed)
-        t0 = time.time()
-        for t in range(total - 1):
-            logits, cache = step(params, cache, tok,
-                                 jnp.full((B,), t, jnp.int32))
-            if t + 1 < args.prompt_len:           # teacher-force the prompt
-                tok = jnp.asarray(prompt[:, t + 1: t + 2])
-            else:
-                if args.temperature > 0:
-                    key = jax.random.fold_in(sample_key, t)
-                    nxt = jax.random.categorical(
-                        key, logits[:, 0] / args.temperature, axis=-1)
-                else:
-                    nxt = jnp.argmax(logits[:, 0], axis=-1)
-                tok = nxt[:, None].astype(jnp.int32)
-                out_tokens.append(np.asarray(tok)[:, 0])
-        dt_s = time.time() - t0
-        gen = np.stack(out_tokens, axis=1)
-        print(f"[serve] {B} seqs × {total} steps in {dt_s:.2f}s "
-              f"({B * args.gen / dt_s:.1f} tok/s)")
-        print("[serve] sample:", gen[0].tolist())
+    if args.run_log:
+        from repro.launch.train import RunLog
+        log = RunLog(args.run_log)
+        log.write(**engine.log_record())
+        log.close()
+        print(f"[serve] run log -> {args.run_log}")
 
 
 if __name__ == "__main__":

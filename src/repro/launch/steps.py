@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES
+from repro.configs.base import ArchConfig, InputShape, resolve_input_shape
 from repro.core import (MetaConfig, TopologyConfig, UpdateConfig, diffusion,
                         update)
 from repro.core.meta_trainer import (TrainState, make_meta_step, schedule_for,
@@ -121,13 +121,16 @@ def split_meta_batch(cfg: ArchConfig, batch: dict, K: int, T: int, tb: int,
 # Input specs (deliverable f): ShapeDtypeStructs for every model input
 # ---------------------------------------------------------------------------
 
-def input_specs(cfg: ArchConfig, shape_name: str) -> dict[str, Any]:
-    """ShapeDtypeStruct stand-ins for one (arch × input-shape).
+def input_specs(cfg: ArchConfig, shape_name: str | InputShape
+                ) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one (arch × input-shape).  The shape
+    may be a registry name or a bare :class:`InputShape` (one-shot
+    geometries need not touch the global registry).
 
     train/prefill: {tokens, labels [, encoder_frames | image_patches]}
     decode:        {token, pos, cache}
     """
-    shape = INPUT_SHAPES[shape_name]
+    shape = resolve_input_shape(shape_name)
     dt = DTYPES[cfg.dtype]
     B, S = shape.global_batch, shape.seq_len
     if shape.kind in ("train", "prefill"):
@@ -152,9 +155,10 @@ def input_specs(cfg: ArchConfig, shape_name: str) -> dict[str, Any]:
     }
 
 
-def input_axes(cfg: ArchConfig, shape_name: str) -> dict[str, Any]:
+def input_axes(cfg: ArchConfig, shape_name: str | InputShape
+               ) -> dict[str, Any]:
     """Logical axes matching input_specs (for sharding assignment)."""
-    shape = INPUT_SHAPES[shape_name]
+    shape = resolve_input_shape(shape_name)
     if shape.kind in ("train", "prefill"):
         axes: dict[str, Any] = {
             "tokens": ("batch", None),
@@ -346,13 +350,14 @@ def opt_state_axes(opt_name: str, params_axes: PyTree) -> PyTree:
     return ()
 
 
-def build_train(cfg: ArchConfig, mesh: Mesh, shape_name: str = "train_4k",
+def build_train(cfg: ArchConfig, mesh: Mesh,
+                shape_name: str | InputShape = "train_4k",
                 combine_override: str | None = None, *,
                 strategy: str | None = None,
                 schedule: str = "static",
                 link_failure_p: float = 0.2,
                 schedule_seed: int = 0) -> TrainBundle:
-    shape = INPUT_SHAPES[shape_name]
+    shape = resolve_input_shape(shape_name)
     assert shape.kind in ("train", "prefill")
     dt = DTYPES[cfg.dtype]
     # Outer-loop storage: params/grads live in out_dt; Adam moments stay
@@ -546,7 +551,7 @@ class PrefillBundle:
     batch_shardings: Any
 
 
-def build_prefill(cfg: ArchConfig, mesh: Mesh, shape_name: str
+def build_prefill(cfg: ArchConfig, mesh: Mesh, shape_name: str | InputShape
                   ) -> PrefillBundle:
     """Inference prefill: one full-sequence forward of the launch model
     (no agent axis, no meta step) producing next-token logits."""
@@ -592,8 +597,9 @@ class ServeBundle:
     input_shardings: Any          # dict for {token,pos,cache}
 
 
-def build_serve(cfg: ArchConfig, mesh: Mesh, shape_name: str) -> ServeBundle:
-    shape = INPUT_SHAPES[shape_name]
+def build_serve(cfg: ArchConfig, mesh: Mesh,
+                shape_name: str | InputShape) -> ServeBundle:
+    shape = resolve_input_shape(shape_name)
     assert shape.kind == "decode"
     dt = DTYPES[cfg.dtype]
     model = build_model(cfg)

@@ -37,7 +37,7 @@ import time
 import jax
 
 from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
-from repro.configs import INPUT_SHAPES, get_config
+from repro.configs import INPUT_SHAPES, get_config, register_input_shape
 from repro.configs.base import InputShape
 from repro.core import diffusion, topology, update
 from repro.data.lm_tasks import LMTaskSource
@@ -183,7 +183,9 @@ def main() -> None:
                 agents=args.mesh_agents)
         else:
             mesh = make_host_mesh(data=args.agents)
-        INPUT_SHAPES[shape.name] = shape
+        # registered (not assigned) so an in-process rerun with a different
+        # geometry replaces the entry loudly instead of leaking state
+        register_input_shape(shape, override=True)
         shape_name = shape.name
     else:
         mesh = make_production_mesh(multi_pod=args.multi_pod,

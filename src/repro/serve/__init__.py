@@ -1,0 +1,14 @@
+"""Serving tier: batched inner-loop adaptation, an adapted-state cache
+with low-rank deltas, and dispatch-free scanned decode.  See SERVING.md
+for the architecture and ``launch/serve.py`` for the CLI."""
+from repro.serve.cache import (AdaptedStateCache, TaskKey,
+                               source_fingerprint, task_key)
+from repro.serve.engine import AdaptRequest, ServeEngine
+from repro.serve.lowrank import (CompressedDelta, DenseLeaf, LowRankLeaf,
+                                 apply_delta, compress_delta)
+
+__all__ = [
+    "AdaptRequest", "AdaptedStateCache", "CompressedDelta", "DenseLeaf",
+    "LowRankLeaf", "ServeEngine", "TaskKey", "apply_delta",
+    "compress_delta", "source_fingerprint", "task_key",
+]

@@ -1,0 +1,355 @@
+"""The serving tier: batched adaptation + cached adapted state + scanned
+decode.
+
+``launch/serve.py`` is a thin CLI over this module.  The engine owns the
+three serving-cost levers:
+
+batched adaptation
+    N concurrent user episodes adapt in ONE vmapped+jitted
+    ``inner_adapt`` dispatch (``EvalHarness.adapt_states`` — the same
+    primitive eval jits) instead of N sequential per-request calls.
+    Request counts are padded up to a small set of compile *buckets* so
+    mixed batch sizes reuse compiled programs instead of retracing.
+
+adapted-state cache
+    Recurring tasks (same ``TaskKey``: source fingerprint × domain ×
+    adapt hyperparams) skip re-adaptation entirely — the cache
+    reconstructs ``w + δ`` from a host-resident low-rank delta
+    (``serve/cache.py``, ``serve/lowrank.py``).
+
+scanned decode
+    Decode is two jitted ``lax.scan`` programs — a teacher-forced
+    *prefill* over the prompt and a sampling *decode* over generated
+    positions — so the steady state is dispatch-free per token batch (no
+    per-token Python dispatch or ``np.asarray`` host sync), and the two
+    phases time (and report tok/s) separately.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.data.episodes import Episode
+from repro.eval.harness import EvalHarness
+from repro.launch import steps as S
+from repro.launch.mesh import make_host_mesh
+from repro.models.transformer import build_model
+from repro.serve.cache import AdaptedStateCache, TaskKey, task_key
+
+PyTree = Any
+
+__all__ = ["AdaptRequest", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class AdaptRequest:
+    """One user's adaptation request: a support episode to adapt on, plus
+    the cache coordinate (``key=None`` opts out of caching)."""
+    support: dict
+    key: TaskKey | None = None
+
+
+def _percentiles(xs: Sequence[float]) -> dict:
+    if not xs:
+        return {}
+    a = np.asarray(xs, dtype=np.float64)
+    return {"p50_us": float(np.percentile(a, 50) * 1e6),
+            "p99_us": float(np.percentile(a, 99) * 1e6),
+            "mean_us": float(a.mean() * 1e6),
+            "n": len(xs)}
+
+
+class ServeEngine:
+    """Adaptation-as-a-service over one launch model.
+
+    Geometry (``batch`` decode sequences of ``prompt_len + gen`` tokens)
+    is fixed per engine — the decode scans compile once.  ``buckets``
+    are the adapt-batch compile sizes; a request batch pads up to the
+    next bucket (and chunks above the largest), so any request count is
+    served by ``len(buckets)`` compiled programs.
+    """
+
+    def __init__(self, cfg: ArchConfig, *, prompt_len: int, gen: int,
+                 batch: int, mesh=None, adapt_steps: int | None = None,
+                 inner_lr: float | None = None, temperature: float = 0.0,
+                 cache_capacity: int = 64, rank: int = 8, tol: float = 0.3,
+                 buckets: tuple[int, ...] = (1, 2, 4, 8, 16),
+                 dtype=None):
+        if prompt_len < 1 or gen < 1:
+            raise ValueError("prompt_len and gen must be >= 1")
+        self.cfg = cfg
+        self.prompt_len = prompt_len
+        self.gen = gen
+        self.batch = batch
+        self.total = prompt_len + gen
+        self.temperature = temperature
+        self.buckets = tuple(sorted(set(buckets)))
+        self.dtype = dtype if dtype is not None else S.DTYPES[cfg.dtype]
+        self.mesh = mesh if mesh is not None else make_host_mesh()
+        self.inner_lr = float(cfg.inner_lr if inner_lr is None else inner_lr)
+        self.adapt_steps = int(cfg.inner_steps if adapt_steps is None
+                               else adapt_steps)
+
+        with self.mesh:
+            self.model = build_model(cfg)
+            # a one-shot InputShape handed straight to the builder — the
+            # engine never touches the global INPUT_SHAPES registry
+            shape = InputShape("serve_adapt", self.total, batch, "decode")
+            self.bundle = S.build_serve(cfg, self.mesh, shape)
+        self.harness = EvalHarness(self.model.loss_fn, self.inner_lr,
+                                   self.adapt_steps)
+        self.cache = AdaptedStateCache(capacity=cache_capacity, rank=rank,
+                                       tol=tol)
+        self.params: PyTree | None = None
+        self._adapt_log: list[dict] = []
+        self._decode_log: list[dict] = []
+        self._build_decode_fns()
+
+    # -- params ---------------------------------------------------------------
+
+    def load_params(self, params: PyTree) -> None:
+        """Install the launch model (checkpoint centroid or fresh init)
+        all residents adapt from.  Invalidates nothing: deltas key on the
+        task, so swap params only together with a fresh cache."""
+        self.params = params
+
+    def _require_params(self) -> PyTree:
+        if self.params is None:
+            raise RuntimeError(
+                "no launch model loaded: call load_params() first")
+        return self.params
+
+    # -- batched adaptation ---------------------------------------------------
+
+    def signature(self, source: Any, domain: int) -> TaskKey:
+        """Cache key for ``domain`` of ``source`` under this engine's
+        adapt hyperparameters."""
+        return task_key(source, domain, self.adapt_steps, self.inner_lr)
+
+    def requests_from_episode(self, source: Any, ep: Episode
+                              ) -> list[AdaptRequest]:
+        """Split an ``eval_sample`` episode (task-leading leaves) into one
+        keyed request per task."""
+        n = jax.tree.leaves(ep.support)[0].shape[0]
+        doms = np.asarray(ep.domains)
+        return [AdaptRequest({k: v[i] for k, v in ep.support.items()},
+                             self.signature(source, int(doms[i])))
+                for i in range(n)]
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def _stack_supports(self, supports: list[dict], pad_to: int) -> dict:
+        n = len(supports)
+        rows = supports + [supports[0]] * (pad_to - n)
+        stacked = {k: jnp.stack([jnp.asarray(r[k]) for r in rows])
+                   for k in supports[0]}
+        tb = jax.tree.leaves(stacked)[0].shape[1]
+        stacked.update(S.modality_extras(self.cfg, (pad_to, tb), self.dtype))
+        return stacked
+
+    def adapt(self, requests: Sequence[AdaptRequest]
+              ) -> tuple[list[PyTree], dict]:
+        """Serve a batch of adaptation requests.
+
+        Cache hits reconstruct from their stored delta; misses adapt in
+        bucket-padded vmapped ``inner_adapt`` dispatches and enter the
+        cache.  Returns per-request adapted params (request order) and a
+        metrics record (hit/miss counts, bucket sizes, phase seconds).
+        """
+        params = self._require_params()
+        results: list[PyTree | None] = [None] * len(requests)
+
+        with self.mesh:
+            t0 = time.perf_counter()
+            miss_idx = []
+            for i, req in enumerate(requests):
+                hit = (self.cache.lookup(req.key, params)
+                       if req.key is not None else None)
+                if hit is None:
+                    miss_idx.append(i)
+                else:
+                    results[i] = hit
+            hit_s = time.perf_counter() - t0
+
+            buckets_used = []
+            t0 = time.perf_counter()
+            cap = self.buckets[-1]
+            for lo in range(0, len(miss_idx), cap):
+                chunk = miss_idx[lo: lo + cap]
+                b = self._bucket(len(chunk))
+                buckets_used.append(b)
+                stacked = self._stack_supports(
+                    [requests[i].support for i in chunk], b)
+                adapted = jax.block_until_ready(
+                    self.harness.adapt_states(params, stacked))
+                for j, i in enumerate(chunk):
+                    one = jax.tree.map(lambda x, j=j: x[j], adapted)
+                    results[i] = one
+                    if requests[i].key is not None:
+                        self.cache.insert(requests[i].key, params, one)
+            miss_s = time.perf_counter() - t0
+
+        n_miss = len(miss_idx)
+        metrics = {
+            "n": len(requests),
+            "hits": len(requests) - n_miss,
+            "misses": n_miss,
+            "buckets": buckets_used,
+            "hit_s": hit_s,
+            "miss_s": miss_s,
+            "seconds": hit_s + miss_s,
+        }
+        self._adapt_log.append(metrics)
+        return results, metrics  # type: ignore[return-value]
+
+    def adapted_loss(self, adapted: Sequence[PyTree], batches: Sequence[dict]
+                     ) -> np.ndarray:
+        """(n,) query losses, each task's adapted params on its own batch
+        — the drift probe for delta-reconstructed states."""
+        tb = jax.tree.leaves(batches[0])[0].shape[0]
+        stacked_p = jax.tree.map(lambda *xs: jnp.stack(xs), *adapted)
+        stacked_b = {k: jnp.stack([jnp.asarray(b[k]) for b in batches])
+                     for k in batches[0]}
+        stacked_b.update(S.modality_extras(self.cfg, (len(batches), tb),
+                                           self.dtype))
+        return np.asarray(self.harness.task_loss(stacked_p, stacked_b))
+
+    # -- scanned decode -------------------------------------------------------
+
+    def _build_decode_fns(self) -> None:
+        step_fn = self.bundle.step_fn
+        B, P, G = self.batch, self.prompt_len, self.gen
+        temperature = self.temperature
+
+        def prefill(params, cache, prompt):
+            # teacher-forced prompt positions 0..P-2 (logits discarded:
+            # the next input is the prompt itself)
+            xs = (prompt.T[: P - 1],
+                  jnp.arange(P - 1, dtype=jnp.int32))
+
+            def body(c, x):
+                tok, pos = x
+                _, c = step_fn(params, c, tok[:, None],
+                               jnp.full((B,), pos, jnp.int32))
+                return c, None
+
+            cache, _ = jax.lax.scan(body, cache, xs)
+            return cache
+
+        def decode(params, cache, tok0, key):
+            # positions P-1..P+G-2: feed the current token, sample the
+            # next — G sampled tokens, zero host syncs inside the scan
+            def body(carry, pos):
+                c, tok = carry
+                logits, c = step_fn(params, c, tok[:, None],
+                                    jnp.full((B,), pos, jnp.int32))
+                if temperature > 0:
+                    k = jax.random.fold_in(key, pos)
+                    nxt = jax.random.categorical(
+                        k, logits[:, 0] / temperature, axis=-1)
+                else:
+                    nxt = jnp.argmax(logits[:, 0], axis=-1)
+                nxt = nxt.astype(jnp.int32)
+                return (c, nxt), nxt
+
+            (cache, _), out = jax.lax.scan(
+                body, (cache, tok0),
+                jnp.arange(P - 1, P - 1 + G, dtype=jnp.int32))
+            return out.T, cache
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode)
+
+    def _encoder_state(self, params: PyTree):
+        cfg, B = self.cfg, self.batch
+        if cfg.arch_type == "audio":
+            frames = jnp.zeros((B, cfg.encoder_frames, cfg.d_model),
+                               self.dtype)
+            return self.model.encode(params, frames)
+        if cfg.arch_type == "vlm":
+            patches = jnp.zeros((B, cfg.num_patches, cfg.d_model),
+                                self.dtype)
+            return patches @ params["vision_proj"]
+        return None
+
+    def decode(self, params: PyTree, prompt: Any, seed: int = 0
+               ) -> tuple[np.ndarray, dict]:
+        """Generate ``gen`` tokens per sequence from an adapted model.
+
+        ``prompt`` is ``(batch, prompt_len)`` int tokens.  Returns
+        ``(batch, prompt_len + gen)`` tokens and per-phase metrics —
+        prompt (prefill) and decode are timed separately, each a single
+        jitted dispatch.
+        """
+        prompt = jnp.asarray(prompt, jnp.int32)
+        if prompt.shape != (self.batch, self.prompt_len):
+            raise ValueError(
+                f"prompt shape {prompt.shape} != "
+                f"{(self.batch, self.prompt_len)}")
+        with self.mesh:
+            cache = self.model.init_cache(
+                self.batch, self.total, self.dtype, params=params,
+                enc=self._encoder_state(params))
+            t0 = time.perf_counter()
+            cache = jax.block_until_ready(
+                self._prefill(params, cache, prompt))
+            prefill_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            out, _ = self._decode(params, cache, prompt[:, -1],
+                                  jax.random.key(seed))
+            out = jax.block_until_ready(out)
+            decode_s = time.perf_counter() - t0
+
+        B, P, G = self.batch, self.prompt_len, self.gen
+        metrics = {
+            "prefill_s": prefill_s,
+            "decode_s": decode_s,
+            # prefill processes P-1 prompt tokens, decode emits G tokens;
+            # the two phases report tok/s separately (a single combined
+            # number double-charges prompt steps to generation)
+            "prompt_tok_s": B * (P - 1) / prefill_s if P > 1 else 0.0,
+            "decode_tok_s": B * G / decode_s,
+        }
+        self._decode_log.append(metrics)
+        tokens = np.concatenate([np.asarray(prompt), np.asarray(out)], axis=1)
+        return tokens, metrics
+
+    # -- run log --------------------------------------------------------------
+
+    def log_record(self) -> dict:
+        """One ``kind=serve`` JSONL record: engine geometry, cache
+        counters, and adapt/decode latency distributions."""
+        adapt_lat = [m["seconds"] / max(m["n"], 1) for m in self._adapt_log]
+        return {
+            "kind": "serve",
+            "arch": self.cfg.name,
+            "batch": self.batch,
+            "prompt_len": self.prompt_len,
+            "gen": self.gen,
+            "adapt_steps": self.adapt_steps,
+            "inner_lr": self.inner_lr,
+            "buckets": list(self.buckets),
+            "cache": self.cache.stats(),
+            "adapt": {
+                "calls": len(self._adapt_log),
+                "requests": sum(m["n"] for m in self._adapt_log),
+                **_percentiles(adapt_lat),
+            },
+            "decode": {
+                "calls": len(self._decode_log),
+                "prompt_tok_s": [m["prompt_tok_s"]
+                                 for m in self._decode_log[-8:]],
+                "decode_tok_s": [m["decode_tok_s"]
+                                 for m in self._decode_log[-8:]],
+            },
+        }

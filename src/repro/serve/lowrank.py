@@ -1,0 +1,136 @@
+"""Low-rank storage of inner-loop adaptation deltas.
+
+A resident serving user is an adapted launch model ``φ = w + δ`` where
+``w`` is the shared checkpoint centroid and ``δ`` is the inner-loop delta
+(a few SGD steps' worth of ``-α∇L`` — see ``core/maml.inner_adapt``).
+Storing full ``φ`` per resident user caps residency at device/host memory
+over the full parameter count; storing only ``δ`` — rank-r factored for
+matrix leaves, dense for the rest — scales resident-user count by the
+compression ratio, and reconstruction (``w + UV``) is a cheap add at
+cache-hit time, orders of magnitude under a re-adaptation.
+
+Compression is *fidelity-gated*: a matrix leaf is stored factored only
+when the rank-r truncation keeps the relative Frobenius error of the
+delta within ``tol``; otherwise that leaf falls back to dense.  The
+pinned serving guarantee (delta-reconstructed params match the full
+adapted params within |Δ query loss| ≤ 1e-2) therefore degrades into
+bytes, never into loss.
+
+Everything here lives on host (numpy, float32): the cache's job is
+residency beyond accelerator memory, so deltas must not pin device
+buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["CompressedDelta", "DenseLeaf", "LowRankLeaf",
+           "apply_delta", "compress_delta"]
+
+
+def _f32(x) -> np.ndarray:
+    # host float32 view of a (possibly bf16, possibly device) leaf
+    return np.asarray(jnp.asarray(x, jnp.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class LowRankLeaf:
+    """``δ ≈ (u @ v).reshape(shape)``: rank-r factors of a matrix leaf
+    (leading dims folded into rows, trailing dim = cols)."""
+    u: np.ndarray                   # (rows, r) float32
+    v: np.ndarray                   # (r, cols) float32
+    shape: tuple[int, ...]
+
+    @property
+    def nbytes(self) -> int:
+        return self.u.nbytes + self.v.nbytes
+
+    def materialize(self) -> np.ndarray:
+        return (self.u @ self.v).reshape(self.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseLeaf:
+    """Verbatim float32 delta — vectors, scalars, and matrix leaves whose
+    rank-r truncation would exceed the fidelity tolerance."""
+    x: np.ndarray
+
+    @property
+    def nbytes(self) -> int:
+        return self.x.nbytes
+
+    def materialize(self) -> np.ndarray:
+        return self.x
+
+
+@dataclasses.dataclass
+class CompressedDelta:
+    """One resident user's adaptation state: a pytree of
+    :class:`LowRankLeaf` / :class:`DenseLeaf` mirroring the params tree."""
+    leaves: PyTree
+    dense_nbytes: int               # bytes of the uncompressed f32 delta
+
+    @property
+    def nbytes(self) -> int:
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(
+            self.leaves, is_leaf=_is_delta_leaf))
+
+    @property
+    def compression(self) -> float:
+        """dense_bytes / stored_bytes (≥ 1; higher is better)."""
+        return self.dense_nbytes / max(self.nbytes, 1)
+
+
+def _is_delta_leaf(x) -> bool:
+    return isinstance(x, (LowRankLeaf, DenseLeaf))
+
+
+def _compress_leaf(d: np.ndarray, rank: int, tol: float):
+    if d.ndim < 2:
+        return DenseLeaf(d)
+    rows, cols = int(np.prod(d.shape[:-1])), d.shape[-1]
+    r = min(rank, rows, cols)
+    # factored storage must actually save bytes
+    if r * (rows + cols) >= rows * cols:
+        return DenseLeaf(d)
+    m = d.reshape(rows, cols)
+    u, s, vt = np.linalg.svd(m, full_matrices=False)
+    total = float(np.sum(s * s))
+    kept = float(np.sum(s[:r] * s[:r]))
+    # relative Frobenius error of the truncation: sqrt(1 - kept/total)
+    if total > 0.0 and 1.0 - kept / total > tol * tol:
+        return DenseLeaf(d)
+    return LowRankLeaf(np.ascontiguousarray(u[:, :r] * s[:r]),
+                       np.ascontiguousarray(vt[:r]), d.shape)
+
+
+def compress_delta(base: PyTree, adapted: PyTree, rank: int = 8,
+                   tol: float = 0.3) -> CompressedDelta:
+    """Compress ``adapted − base`` leaf-wise.
+
+    ``rank`` bounds the factorization; ``tol`` is the per-leaf relative
+    Frobenius error above which a leaf stays dense (fidelity gate).
+    """
+    deltas = jax.tree.map(lambda a, b: _f32(a) - _f32(b), adapted, base)
+    dense_nbytes = sum(d.nbytes for d in jax.tree.leaves(deltas))
+    leaves = jax.tree.map(lambda d: _compress_leaf(d, rank, tol), deltas)
+    return CompressedDelta(leaves, dense_nbytes)
+
+
+def apply_delta(base: PyTree, comp: CompressedDelta) -> PyTree:
+    """Reconstruct adapted params: ``base + δ`` in float32, cast back to
+    each base leaf's dtype.  This is the cache-hit path — one add per
+    leaf, no gradient computation."""
+    def leaf(b, d):
+        out = jnp.asarray(b, jnp.float32) + jnp.asarray(d.materialize())
+        return out.astype(b.dtype)
+
+    return jax.tree.map(leaf, base, comp.leaves,
+                        is_leaf=lambda x: _is_delta_leaf(x))

@@ -133,6 +133,52 @@ def test_bfloat16_save_restore_resume_bit_parity(tmp_path):
         np.testing.assert_array_equal(_bits(a), _bits(b))
 
 
+def test_restore_centroid_missing_dir_raises(tmp_path):
+    """Serve's first failure mode: a ckpt dir that was never created.
+    The error must name the directory."""
+    like = {"w": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    missing = str(tmp_path / "never_written")
+    with pytest.raises(FileNotFoundError, match="does not exist"):
+        restore_centroid(missing, like)
+
+
+def test_restore_centroid_empty_dir_raises(tmp_path):
+    """A dir that exists but holds no ckpt_*.npz (e.g. a crashed save
+    left only tmp files) must say so, not die on max() of empty."""
+    (tmp_path / "stray.txt").write_text("not a checkpoint")
+    like = {"w": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    with pytest.raises(FileNotFoundError, match="no ckpt_"):
+        restore_centroid(str(tmp_path), like)
+
+
+def test_restore_centroid_missing_step_lists_available(tmp_path):
+    state = _state()
+    save_checkpoint(str(tmp_path), 3, state)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                        state.params)
+    with pytest.raises(FileNotFoundError, match=r"available steps: \[3\]"):
+        restore_centroid(str(tmp_path), like, step=9)
+
+
+def test_restore_centroid_spec_mismatch_names_leaf(tmp_path):
+    """Restoring with a spec from a different arch: the error must name
+    the missing leaf and say the checkpoint doesn't match, not KeyError
+    on a raw npz key."""
+    state = _state()
+    save_checkpoint(str(tmp_path), 0, state)
+    like = {"not_in_ckpt": jax.ShapeDtypeStruct((2,), jnp.float32)}
+    with pytest.raises(KeyError, match="does not match the requested spec"):
+        restore_centroid(str(tmp_path), like)
+
+
+def test_restore_checkpoint_spec_mismatch_names_leaf(tmp_path):
+    state = _state()
+    save_checkpoint(str(tmp_path), 0, state)
+    bad = {"wrong_layout": jnp.zeros(3)}
+    with pytest.raises(KeyError, match="does not match the requested spec"):
+        restore_checkpoint(str(tmp_path), bad)
+
+
 def test_restore_centroid_shape_mismatch_raises(tmp_path):
     state = _state()
     save_checkpoint(str(tmp_path), 0, state)

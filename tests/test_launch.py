@@ -148,6 +148,47 @@ def test_train_bundle_builds_on_host_mesh():
     del INPUT_SHAPES["t_test"]
 
 
+def test_register_input_shape_idempotent_and_conflict():
+    """The registry helper (replaces raw INPUT_SHAPES mutation): same
+    value re-registers silently, a different geometry under the same name
+    fails loudly unless override=True."""
+    from repro.configs import register_input_shape
+    from repro.configs.base import InputShape
+    shape = InputShape("reg_test", 16, 8, "train")
+    try:
+        register_input_shape(shape)
+        assert INPUT_SHAPES["reg_test"] is shape
+        register_input_shape(InputShape("reg_test", 16, 8, "train"))  # no-op
+        clash = InputShape("reg_test", 32, 8, "train")
+        with pytest.raises(ValueError, match="already registered"):
+            register_input_shape(clash)
+        register_input_shape(clash, override=True)
+        assert INPUT_SHAPES["reg_test"].seq_len == 32
+    finally:
+        del INPUT_SHAPES["reg_test"]
+
+
+def test_register_input_shape_protects_builtins():
+    from repro.configs import register_input_shape
+    from repro.configs.base import InputShape
+    with pytest.raises(ValueError, match="built in"):
+        register_input_shape(InputShape("train_4k", 16, 8, "train"),
+                             override=True)
+
+
+def test_input_shape_scope_restores_registry():
+    from repro.configs import input_shape_scope
+    from repro.configs.base import InputShape
+    before = dict(INPUT_SHAPES)
+    with input_shape_scope(InputShape("scoped_a", 16, 8, "train")) as sh:
+        assert INPUT_SHAPES["scoped_a"] is sh
+        # shadow a non-builtin name, restore the prior entry on exit
+        with input_shape_scope(InputShape("scoped_a", 32, 8, "train")):
+            assert INPUT_SHAPES["scoped_a"].seq_len == 32
+        assert INPUT_SHAPES["scoped_a"] is sh
+    assert dict(INPUT_SHAPES) == before
+
+
 def test_meta_config_for_uses_arch_fields():
     cfg = get_config("deepseek-v2-lite-16b")
     mcfg = S.meta_config_for(cfg, K=16, T=2)

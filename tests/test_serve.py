@@ -1,0 +1,296 @@
+"""The serving tier (repro.serve): low-rank deltas, the adapted-state
+cache, and the batched-adapt + scanned-decode engine.
+
+Pins the ISSUE's serving guarantees at test time: delta-reconstructed
+adapted params stay within |Δ query loss| ≤ 1e-2 of the full adapted
+params, factored storage actually compresses, and the cache's recurring
+fast path returns the same states it was given.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.serve import (AdaptRequest, AdaptedStateCache, DenseLeaf,
+                         LowRankLeaf, ServeEngine, apply_delta,
+                         compress_delta, source_fingerprint, task_key)
+
+# -- low-rank deltas ----------------------------------------------------------
+
+
+def _rank_r_delta(rng, rows, cols, r):
+    return (rng.standard_normal((rows, r)) @
+            rng.standard_normal((r, cols))).astype(np.float32)
+
+
+def test_compress_exact_for_low_rank_delta():
+    """A delta that truly is rank-r factors losslessly (up to SVD fp) and
+    reconstruction returns base + delta."""
+    rng = np.random.default_rng(0)
+    base = {"w": rng.standard_normal((64, 48)).astype(np.float32),
+            "b": rng.standard_normal(48).astype(np.float32)}
+    delta = {"w": _rank_r_delta(rng, 64, 48, 3),
+             "b": rng.standard_normal(48).astype(np.float32) * 0.01}
+    adapted = jax.tree.map(lambda b, d: b + d, base, delta)
+    comp = compress_delta(base, adapted, rank=8, tol=0.3)
+    assert isinstance(comp.leaves["w"], LowRankLeaf)
+    assert isinstance(comp.leaves["b"], DenseLeaf)   # vectors stay dense
+    rec = apply_delta(base, comp)
+    np.testing.assert_allclose(np.asarray(rec["w"]), adapted["w"],
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(rec["b"]), adapted["b"])
+
+
+def test_compression_ratio_exceeds_one():
+    """The point of the factored store: rank-8 factors of a 256x256 delta
+    must cost a fraction of the dense bytes."""
+    rng = np.random.default_rng(1)
+    base = {"w": np.zeros((256, 256), np.float32)}
+    adapted = {"w": _rank_r_delta(rng, 256, 256, 4)}
+    comp = compress_delta(base, adapted, rank=8, tol=0.3)
+    assert isinstance(comp.leaves["w"], LowRankLeaf)
+    assert comp.compression > 4.0
+    assert comp.nbytes < comp.dense_nbytes
+
+
+def test_fidelity_gate_falls_back_to_dense():
+    """A full-rank delta under a tight tolerance must NOT be truncated —
+    the gate degrades into bytes, never into loss."""
+    rng = np.random.default_rng(2)
+    base = {"w": np.zeros((64, 64), np.float32)}
+    adapted = {"w": rng.standard_normal((64, 64)).astype(np.float32)}
+    comp = compress_delta(base, adapted, rank=4, tol=0.05)
+    assert isinstance(comp.leaves["w"], DenseLeaf)
+    rec = apply_delta(base, comp)
+    np.testing.assert_array_equal(np.asarray(rec["w"]), adapted["w"])
+
+
+def test_tiny_matrix_stays_dense():
+    """Factored storage must actually save bytes: an 8x8 leaf at rank 8
+    would cost more factored than dense."""
+    base = {"w": np.zeros((8, 8), np.float32)}
+    adapted = {"w": np.ones((8, 8), np.float32)}
+    comp = compress_delta(base, adapted, rank=8, tol=1.0)
+    assert isinstance(comp.leaves["w"], DenseLeaf)
+
+
+def test_higher_rank_folds_leading_dims():
+    """3D leaves (e.g. stacked heads) fold leading dims into rows."""
+    rng = np.random.default_rng(3)
+    base = {"w": np.zeros((4, 32, 24), np.float32)}
+    adapted = {"w": _rank_r_delta(rng, 4 * 32, 24, 2).reshape(4, 32, 24)}
+    comp = compress_delta(base, adapted, rank=8, tol=0.3)
+    leaf = comp.leaves["w"]
+    assert isinstance(leaf, LowRankLeaf)
+    assert leaf.shape == (4, 32, 24)
+    np.testing.assert_allclose(leaf.materialize(), adapted["w"],
+                               rtol=1e-4, atol=1e-4)
+
+
+# -- cache keys + LRU ---------------------------------------------------------
+
+
+class _Src:
+    def __init__(self, vocab, seed):
+        self.vocab = vocab
+        self.seed = seed
+        self.blob = np.zeros(3)           # non-primitive: not fingerprinted
+
+
+def test_source_fingerprint_primitives_only():
+    a, b = _Src(64, 0), _Src(64, 0)
+    assert source_fingerprint(a) == source_fingerprint(b)
+    assert source_fingerprint(_Src(64, 1)) != source_fingerprint(a)
+    assert "blob" not in source_fingerprint(a)
+
+
+def test_task_key_distinguishes_adapt_hyperparams():
+    src = _Src(64, 0)
+    k = task_key(src, 3, 2, 0.01)
+    assert k == task_key(src, 3, 2, 0.01)
+    assert k != task_key(src, 4, 2, 0.01)      # different domain
+    assert k != task_key(src, 3, 1, 0.01)      # different steps
+    assert k != task_key(src, 3, 2, 0.02)      # different lr
+
+
+def test_cache_lru_eviction_and_counters():
+    base = {"w": jnp.zeros((4, 4), jnp.float32)}
+    cache = AdaptedStateCache(capacity=2)
+    keys = [task_key(_Src(64, 0), d, 1, 0.01) for d in range(3)]
+    for i, k in enumerate(keys):
+        assert cache.lookup(k, base) is None                 # miss
+        cache.insert(k, base, {"w": jnp.full((4, 4), float(i + 1))})
+    # capacity 2: key 0 (least recently used) was evicted
+    assert cache.evictions == 1
+    assert keys[0] not in cache and keys[1] in cache and keys[2] in cache
+    assert cache.lookup(keys[0], base) is None
+    got = cache.lookup(keys[2], base)
+    np.testing.assert_allclose(np.asarray(got["w"]),
+                               np.full((4, 4), 3.0), rtol=1e-6)
+    stats = cache.stats()
+    assert stats["hits"] == 1 and stats["misses"] == 4
+    assert stats["residents"] == 2 and stats["evictions"] == 1
+    assert stats["compression"] >= 1.0
+
+
+def test_cache_lookup_refreshes_recency():
+    base = {"w": jnp.zeros(3)}
+    cache = AdaptedStateCache(capacity=2)
+    k = [task_key(_Src(64, 0), d, 1, 0.01) for d in range(3)]
+    cache.insert(k[0], base, {"w": jnp.ones(3)})
+    cache.insert(k[1], base, {"w": jnp.ones(3)})
+    cache.lookup(k[0], base)                   # k0 becomes most recent
+    cache.insert(k[2], base, {"w": jnp.ones(3)})
+    assert k[0] in cache and k[1] not in cache  # k1 was the LRU victim
+
+
+def test_cache_preserves_param_dtype():
+    base = {"w": jnp.zeros((4, 4), jnp.bfloat16)}
+    cache = AdaptedStateCache(capacity=2)
+    k = task_key(_Src(64, 0), 0, 1, 0.01)
+    cache.insert(k, base, {"w": jnp.ones((4, 4), jnp.bfloat16)})
+    got = cache.lookup(k, base)
+    assert got["w"].dtype == jnp.bfloat16
+
+
+# -- the engine ---------------------------------------------------------------
+
+P, G, B = 4, 4, 2
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = ArchConfig(name="serve-test", arch_type="dense", num_layers=1,
+                     d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                     d_ff=64, vocab_size=128, dtype="float32", remat=False,
+                     attn_q_chunk=None, inner_lr=1e-2, inner_steps=1)
+    eng = ServeEngine(cfg, prompt_len=P, gen=G, batch=B, adapt_steps=2,
+                      buckets=(1, 2, 4))
+    params = eng.model.init(jax.random.key(0), jnp.float32)
+    eng.load_params(params)
+    return eng
+
+
+@pytest.fixture(scope="module")
+def episode(engine):
+    from repro.launch.serve import make_support_source
+    source = make_support_source(engine.cfg, P + G, B)
+    # seed 3 draws three DISTINCT domains — duplicate domains share a
+    # cache key by design (see test_duplicate_domains_alias_one_entry),
+    # which would confound the per-task drift comparison below
+    ep = source.eval_sample(3, seed=3, split="full")
+    assert len(set(np.asarray(ep.domains).tolist())) == 3
+    return source, ep
+
+
+def test_engine_requires_params():
+    cfg = ArchConfig(name="serve-noparams", arch_type="dense", num_layers=1,
+                     d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+                     d_ff=64, vocab_size=128, dtype="float32", remat=False,
+                     attn_q_chunk=None, inner_lr=1e-2, inner_steps=1)
+    eng = ServeEngine(cfg, prompt_len=P, gen=G, batch=B)
+    with pytest.raises(RuntimeError, match="load_params"):
+        eng.adapt([AdaptRequest({"tokens": np.zeros((B, P + G))})])
+
+
+def test_adapt_miss_then_hit_counters(engine, episode):
+    source, ep = episode
+    reqs = engine.requests_from_episode(source, ep)
+    assert len(reqs) == 3
+    engine.cache._store.clear()
+    h0, m0 = engine.cache.hits, engine.cache.misses
+    _, metrics = engine.adapt(reqs)
+    assert metrics["misses"] == 3 and metrics["hits"] == 0
+    # 3 requests pad up to the 4-bucket: one compiled program serves them
+    assert metrics["buckets"] == [4]
+    _, metrics = engine.adapt(reqs)
+    assert metrics["hits"] == 3 and metrics["misses"] == 0
+    assert engine.cache.hits - h0 == 3
+    assert engine.cache.misses - m0 == 3
+
+
+def test_adapt_matches_harness_states(engine, episode):
+    """Bucket padding must not change the answer: engine.adapt == the
+    harness's vmapped adapt_states on the unpadded batch."""
+    source, ep = episode
+    reqs = [AdaptRequest({k: v[i] for k, v in ep.support.items()})
+            for i in range(3)]                  # keyless: no cache path
+    results, _ = engine.adapt(reqs)
+    stacked = engine.harness.adapt_states(
+        engine.params, jax.tree.map(jnp.asarray, ep.support))
+    for i, res in enumerate(results):
+        ref = jax.tree.map(lambda x, i=i: x[i], stacked)
+        for a, b in zip(jax.tree.leaves(res), jax.tree.leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cached_reconstruction_drift_within_pin(engine, episode):
+    """The ISSUE's fidelity pin: query loss of delta-reconstructed adapted
+    params within 1e-2 of the full adapted params."""
+    source, ep = episode
+    reqs = engine.requests_from_episode(source, ep)
+    engine.cache._store.clear()
+    full, m = engine.adapt(reqs)
+    assert m["misses"] == len(reqs)
+    rec, m = engine.adapt(reqs)
+    assert m["hits"] == len(reqs)
+    qry = [{k: v[i] for k, v in ep.query.items()} for i in range(3)]
+    drift = np.abs(engine.adapted_loss(full, qry)
+                   - engine.adapted_loss(rec, qry))
+    assert float(drift.max()) <= 1e-2, f"delta drift {drift} exceeds pin"
+
+
+def test_duplicate_domains_alias_one_entry(engine):
+    """Two requests for the SAME domain share one cache key — that is the
+    recurring-user semantics (one resident state per task), so the second
+    insert wins and a later lookup returns that state for both."""
+    from repro.launch.serve import make_support_source
+    source = make_support_source(engine.cfg, P + G, B)
+    ep = source.eval_sample(3, seed=5, split="full")    # domains [3, 5, 3]
+    doms = np.asarray(ep.domains).tolist()
+    assert len(set(doms)) == 2
+    reqs = engine.requests_from_episode(source, ep)
+    assert reqs[0].key == reqs[2].key
+    engine.cache._store.clear()
+    _, m = engine.adapt(reqs)
+    assert m["misses"] == 3
+    assert engine.cache.stats()["residents"] == 2       # aliased pair = 1
+    _, m = engine.adapt(reqs)
+    assert m["hits"] == 3
+
+
+def test_decode_shapes_and_phase_metrics(engine, episode):
+    _, ep = episode
+    prompt = np.asarray(ep.query["tokens"][0])[:, :P]
+    tokens, metrics = engine.decode(engine.params, prompt)
+    assert tokens.shape == (B, P + G)
+    np.testing.assert_array_equal(tokens[:, :P], prompt)
+    assert np.all(tokens >= 0) and np.all(tokens < engine.cfg.padded_vocab)
+    # the satellite fix: prompt and decode phases are timed separately
+    assert metrics["prompt_tok_s"] > 0 and metrics["decode_tok_s"] > 0
+    assert metrics["prefill_s"] > 0 and metrics["decode_s"] > 0
+
+
+def test_decode_greedy_is_deterministic(engine, episode):
+    _, ep = episode
+    prompt = np.asarray(ep.query["tokens"][0])[:, :P]
+    a, _ = engine.decode(engine.params, prompt, seed=0)
+    b, _ = engine.decode(engine.params, prompt, seed=1)  # temp=0: seed moot
+    np.testing.assert_array_equal(a, b)
+
+
+def test_decode_rejects_wrong_prompt_shape(engine):
+    with pytest.raises(ValueError, match="prompt shape"):
+        engine.decode(engine.params, np.zeros((B, P + 1), np.int32))
+
+
+def test_log_record_is_serve_kind_and_complete(engine):
+    """The record must satisfy scripts/check_run_log.py --serve."""
+    import json
+    rec = json.loads(json.dumps(engine.log_record()))
+    assert rec["kind"] == "serve"
+    assert {"hits", "misses", "evictions", "residents",
+            "compression"} <= set(rec["cache"])
+    assert {"p50_us", "p99_us"} <= set(rec["adapt"])
+    assert rec["decode"]["prompt_tok_s"] and rec["decode"]["decode_tok_s"]
